@@ -1,0 +1,51 @@
+"""Shared benchmark scaffolding: fabrics, CSV emission, Spearman."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    cost_matrix,
+    make_datacenter,
+    probe_fabric,
+    scramble,
+)
+
+#: Benchmarks run at a reduced node count by default so the whole suite
+#: finishes in minutes on CPU; pass full=True for the paper's 512.
+N_FAST = 64
+N_FULL = 512
+
+
+def std_fabric(n: int, seed: int = 0):
+    """The scrambled multi-tenant datacenter every benchmark shares."""
+    fab, _ = scramble(make_datacenter(n, seed=seed), seed=seed + 1)
+    return fab
+
+
+def probed_cost(fab, size_bytes: float = 0.0, seed: int = 0) -> np.ndarray:
+    return cost_matrix(probe_fabric(fab, seed=seed), size_bytes)
+
+
+def spearman(x, y) -> float:
+    rx = np.argsort(np.argsort(np.asarray(x)))
+    ry = np.argsort(np.argsort(np.asarray(y)))
+    return float(np.corrcoef(rx, ry)[0, 1])
+
+
+def emit(rows: List[Dict]) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows (harness contract)."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0):.3f},{r.get('derived', '')}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,69 @@
+"""Paper Fig. 4: best-vs-worst rank-order speedup per algorithm.
+
+Paper: 512 F16 nodes (64 GPU nodes for NCCL), 100 MB allreduce; ring
+family gains most (up to 3.7x), halving-doubling / tree / bcube less —
+their sum-of-max objectives are flatter under permutation.  We reproduce
+the per-algorithm ordering and magnitudes on the simulated fabric.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    CollectiveSimulator,
+    make_cost_model,
+    solve,
+    solve_worst,
+)
+
+from .common import N_FAST, Timer, emit, probed_cost, std_fabric
+
+#: (schedule, cost-model kwargs, options).  ``bw=True`` parameterizes the
+#: cost matrix with the per-edge payload (lat + S_edge/bw) — the paper's
+#: §VI "incorporate bandwidth" suggestion, which our experiments show is
+#: required for the bandwidth-bound tree/HD objectives (EXPERIMENTS §Fig4).
+ALGOS = [
+    ("ring", {}, {}),
+    ("ring_sequential", {}, {"model": "ring"}),
+    ("halving_doubling", {}, {"bw": True, "payload_frac": 0.5}),
+    ("double_binary_tree", {}, {"tag": "path", "bw": True, "payload_frac": 0.5}),
+    ("double_binary_tree", {"mode": "barrier"},
+     {"tag": "barrier", "bw": True, "payload_frac": 0.5}),
+    ("bcube", {"base": 4}, {"bw": True, "payload_frac": 0.25}),
+]
+
+
+def run(n_nodes: int = N_FAST, size: float = 100e6, seed: int = 0,
+        iters: int = 800):
+    fab = std_fabric(n_nodes, seed=seed)
+    rows, results = [], {}
+    for sched_name, kw, opts in ALGOS:
+        model_name = opts.get("model", sched_name)
+        tag = opts.get("tag")
+        payload = size * opts["payload_frac"] if opts.get("bw") else 0.0
+        c = probed_cost(fab, payload, seed=seed)
+        m = make_cost_model(model_name, c, payload, **kw)
+        with Timer() as t:
+            best = solve(m, iters=iters, seed=0)
+            worst = solve_worst(m, iters=iters, seed=0)
+            sim = CollectiveSimulator(fab, sched_name, size)
+            t_best = sim.run(best.perm)
+            t_worst = sim.run(worst.perm)
+        speedup = t_worst / t_best
+        key = sched_name if not tag else f"{sched_name}_{tag}"
+        results[key] = speedup
+        rows.append({
+            "name": f"fig4_speedup_{key}",
+            "us_per_call": t.s * 1e6,
+            "derived": (
+                f"best_ms={t_best * 1e3:.1f};worst_ms={t_worst * 1e3:.1f};"
+                f"speedup={speedup:.2f}x"
+            ),
+        })
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one entry per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).  Each module
+is also runnable standalone: ``python -m benchmarks.fig1_distribution``.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        e2e_training,
+        fig1_distribution,
+        fig2_heatmap,
+        fig4_speedups,
+        roofline,
+        solver_quality,
+        table1_spearman,
+    )
+
+    failures = 0
+    for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
+                fig4_speedups, e2e_training, solver_quality, roofline):
+        try:
+            mod.run()
+        except Exception as e:  # print and continue; report at exit
+            failures += 1
+            print(f"{mod.__name__}.FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Solver-quality benchmark: paper stage-1 SA vs our full pipeline.
+
+Not tied to a paper figure; quantifies the beyond-paper solver additions
+(greedy construction, 2-opt/Or-opt refinement, Held-Karp exactness at
+small N) against the paper's SA on the same budget — EXPERIMENTS §5.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import exhaustive, make_cost_model, solve, solve_sa
+
+from .common import Timer, emit, probed_cost, std_fabric
+
+
+def run(seed: int = 0):
+    rows = []
+
+    # exactness check at small N: auto must hit the global optimum
+    fab8 = std_fabric(8, seed=seed)
+    c8 = probed_cost(fab8, 0.0, seed=seed)
+    m8 = make_cost_model("ring", c8, 0.0)
+    _, best8 = exhaustive(m8)
+    res8 = solve(m8, method="auto")
+    rows.append({
+        "name": "solver_exact_n8",
+        "us_per_call": res8.wall_s * 1e6,
+        "derived": f"optimum={best8:.6e};auto={res8.cost:.6e};"
+                   f"hit={abs(res8.cost - best8) < 1e-12}",
+    })
+
+    # quality at n=64 on equal iteration budgets
+    fab = std_fabric(64, seed=seed + 1)
+    c = probed_cost(fab, 0.0, seed=seed + 1)
+    m = make_cost_model("ring", c, 0.0)
+    with Timer() as t_sa:
+        sa = solve_sa(m, iters=3000, chains=16, seed=0)
+    with Timer() as t_paper:
+        paper = solve(m, method="paper", iters=3000, chains=16, seed=0)
+    with Timer() as t_auto:
+        auto = solve(m, method="auto", iters=3000, chains=16, seed=0)
+    rng = np.random.default_rng(0)
+    rand = m.cost_batch(np.stack([rng.permutation(64) for _ in range(128)]))
+    rows += [
+        {"name": "solver_sa_only_n64", "us_per_call": t_sa.s * 1e6,
+         "derived": f"cost={sa.cost:.5e};vs_rand={rand.mean() / sa.cost:.2f}x"},
+        {"name": "solver_paper_pipeline_n64", "us_per_call": t_paper.s * 1e6,
+         "derived": f"cost={paper.cost:.5e};gain_over_sa={sa.cost / paper.cost:.3f}x"},
+        {"name": "solver_auto_pipeline_n64", "us_per_call": t_auto.s * 1e6,
+         "derived": f"cost={auto.cost:.5e};gain_over_sa={sa.cost / auto.cost:.3f}x;"
+                    f"stage2={auto.trace[-1][0]}"},
+    ]
+    emit(rows)
+    return {"sa": sa.cost, "paper": paper.cost, "auto": auto.cost}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Table I: Spearman correlation of cost model vs actual time.
+
+Paper methodology (§V-B): 10 rank orders at ~10i-th cost percentiles from
+the solver, correlate predicted vs measured (Gloo/OpenMPI ring, 100 MB,
+64 nodes; reported rho = 0.58-0.94).  Our 'actual' is the contention-
+aware flow-level simulator, which models what the latency-only cost model
+does not — so the correlation is informative, not circular.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    CollectiveSimulator,
+    make_cost_model,
+    percentile_orders,
+    solve,
+    solve_worst,
+)
+
+from .common import Timer, emit, probed_cost, spearman, std_fabric
+
+
+def run(n_nodes: int = 64, size: float = 100e6, seed: int = 0):
+    fab = std_fabric(n_nodes, seed=seed)
+    c = probed_cost(fab, 0.0, seed=seed)
+    rows = []
+    results = {}
+    for algo in ("ring", "halving_doubling"):
+        m = make_cost_model(algo, c, 0.0)
+        with Timer() as t:
+            best = solve(m, iters=800, seed=0)
+            worst = solve_worst(m, iters=800, seed=0)
+            orders = percentile_orders(m, best.perm, worst.perm, k=10, seed=0)
+            pred = m.cost_batch(np.stack(orders))
+            sim = CollectiveSimulator(fab, algo, size)
+            act = sim.run_many(orders)
+        rho = spearman(pred, act)
+        results[algo] = rho
+        rows.append({
+            "name": f"table1_spearman_{algo}",
+            "us_per_call": t.s * 1e6,
+            "derived": f"rho={rho:.3f};paper_range=0.58-0.94",
+        })
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model for a few
+hundred steps on synthetic data with the full production stack —
+cloud-aware reordered mesh plan, AdamW + ZeRO specs, async checkpoints,
+straggler-fed dynamic re-ranking, and (injectable) failure recovery.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch qwen2-0.5b]
+
+On this CPU container the model is width-reduced to ~waist size so a few
+hundred steps finish in minutes; on a TPU fleet drop --reduce.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_datacenter
+from repro.data import SyntheticLM, host_batch
+from repro.models import get_model
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.train import (
+    ClusterView,
+    Trainer,
+    TrainerConfig,
+    init_state,
+    make_train_step,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduce", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", type=int, default=0,
+                    help="simulate node failures at this step")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        # small-but-real reduction that keeps the architecture family;
+        # vocab is shrunk so a few hundred CPU steps visibly learn the
+        # synthetic stream's Markov structure
+        cfg = dataclasses.replace(
+            cfg, n_layers=4, d_model=256, n_heads=8, n_kv_heads=2,
+            head_dim=32, d_ff=1024, vocab_size=2048, dtype="float32",
+            loss_chunk_size=0, attn_q_chunk=0)
+    model = get_model(cfg)
+    print(f"arch={cfg.name} params~{cfg.param_count() / 1e6:.0f}M")
+
+    state = init_state(model, jax.random.PRNGKey(0))
+    opt = AdamWConfig(schedule=cosine_schedule(1e-3, 10, args.steps))
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    def batches():
+        i = 0
+        while True:
+            yield host_batch(ds, i)
+            i += 1
+
+    cluster = ClusterView(
+        fabric=make_datacenter(64, seed=0),
+        mesh_shape=(8, 8), axis_names=("data", "model"))
+
+    injector = None
+    if args.inject_failure:
+        fired = {}
+
+        def injector(step):
+            if step == args.inject_failure and not fired:
+                fired["x"] = True
+                return [5, 9]
+            return None
+
+    trainer = Trainer(
+        step_fn=step_fn, state=state, batches=batches(),
+        cfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                          ckpt_dir=args.ckpt_dir, log_every=20),
+        cluster=cluster, failure_injector=injector)
+    report = trainer.run()
+
+    first = report["history"][0]["loss"]
+    last = report["history"][-1]["loss"]
+    print(f"steps={report['final_step']} restarts={report['restarts']} "
+          f"rerank_events={report['rerank_events']}")
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first, "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing: atomic, manifested, optionally async.
+
+Layout::
+
+    <dir>/step_000123/
+        arrays.npz          # flattened leaves (host-gathered)
+        manifest.json       # tree structure, shapes, dtypes, step, extras
+    <dir>/LATEST            # atomic pointer file (write-temp + rename)
+
+Guarantees:
+* a checkpoint is visible (pointed to by LATEST) only after all bytes are
+  durably on disk (tmp-dir + ``os.replace`` rename);
+* interrupted saves leave the previous LATEST intact — restart-safe;
+* ``AsyncCheckpointer`` snapshots to host memory synchronously (cheap)
+  and writes on a background thread so the train loop never blocks on IO.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+
+def _flatten_with_names(tree: Any):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, jax.tree.structure(tree)
+
+
+def save(directory: str, step: int, tree: Any,
+         extras: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic synchronous checkpoint.  Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    host = [np.asarray(x) for x in leaves]
+
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_save_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": a for i, a in enumerate(host)})
+        manifest = {
+            "step": int(step),
+            "names": names,
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [str(a.dtype) for a in host],
+            "extras": extras or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(directory, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(f"step_{step:08d}")
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    path = os.path.join(directory, name)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None
+            ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Leaves are returned as numpy; callers re-device-put with their own
+    shardings (which is what makes restore work across *different* mesh
+    shapes after an elastic restart).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(len(manifest["names"]))]
+    flat_like, tdef = jax.tree.flatten(like)
+    assert len(flat_like) == len(leaves), (
+        f"checkpoint has {len(leaves)} leaves, template {len(flat_like)}")
+    for a, b in zip(flat_like, leaves):
+        assert tuple(a.shape) == tuple(b.shape), (a.shape, b.shape)
+    return tdef.unflatten(leaves), manifest["step"], manifest["extras"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-now, write-later checkpointing.
+
+    ``save`` copies device arrays to host synchronously (the only part
+    that must be consistent with training state) then spawns a writer
+    thread.  ``wait()`` joins the in-flight write; a new save waits for
+    the previous one (single-writer discipline).
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any,
+             extras: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extras)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,48 @@
+"""Cloud Collectives core: cost models, probing, solving, mesh reordering.
+
+The paper's pipeline, end to end::
+
+    fabric  = topology.make_tpu_fleet(...)        # or a live cluster
+    probed  = probe.probe_fabric(fabric)          # §IV-B pairwise probing
+    c       = probe.cost_matrix(probed, S)        # c_{i,j}(S)
+    result  = reorder.optimize_rank_order(c, "ring", S)   # §IV-C solving
+    plan    = reorder.optimize_mesh_assignment(c, (16, 16), ("data", "model"))
+    mesh    = launch.mesh.make_production_mesh(plan=plan) # reordered Mesh
+"""
+
+from .cost_models import (  # noqa: F401
+    COST_MODELS,
+    AllToAllCost,
+    BCubeCost,
+    CostModel,
+    DoubleBinaryTreeCost,
+    HalvingDoublingCost,
+    RingCost,
+    make_cost_model,
+)
+from .dynamic import AdaptiveReranker, StragglerDetector, bottleneck_swap  # noqa: F401
+from .probe import ProbeResult, cost_matrix, probe_fabric, probe_mesh_pairwise  # noqa: F401
+from .reorder import (  # noqa: F401
+    MeshPlan,
+    mesh_axis_cost,
+    mesh_total_cost,
+    optimize_mesh_assignment,
+    optimize_rank_order,
+    random_assignment,
+)
+from .schedule import SCHEDULES, Flow  # noqa: F401
+from .simulator import CollectiveSimulator, simulate_collective, simulate_rounds  # noqa: F401
+from .solver import (  # noqa: F401
+    SolveResult,
+    exhaustive,
+    greedy_ring,
+    held_karp,
+    or_opt,
+    percentile_orders,
+    solve,
+    solve_sa,
+    solve_worst,
+    swap_hill_climb,
+    two_opt,
+)
+from .topology import Fabric, make_datacenter, make_tpu_fleet, scramble  # noqa: F401

@@ -1,0 +1,189 @@
+"""Explicit flow schedules for collective algorithms.
+
+While :mod:`repro.core.cost_models` is the paper's *analytic* view (used by
+the solver), this module emits the actual per-round point-to-point flows a
+backend would issue, so the contention-aware simulator
+(:mod:`repro.core.simulator`) can act as the "real cloud" oracle that the
+cost model is validated against (paper Table I).
+
+A schedule is ``List[List[Flow]]``: rounds of concurrent flows.  Flows in
+one round contend for links; rounds are separated by barriers (the
+conservative standard model for collectives).
+
+All builders take ``perm`` with ``perm[rank] = node`` and emit flows in
+*node* space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Flow",
+    "ring_allreduce_chunked",
+    "ring_allreduce_sequential",
+    "halving_doubling_allreduce",
+    "double_binary_tree_allreduce",
+    "bcube_allreduce",
+    "all_to_all",
+    "SCHEDULES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    src: int
+    dst: int
+    size: float  # bytes
+
+
+def _p(perm: Sequence[int], rank: int) -> int:
+    return int(perm[rank % len(perm)])
+
+
+def ring_allreduce_chunked(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """Bandwidth-optimal ring: reduce-scatter + all-gather, S/N chunks.
+
+    2(N-1) rounds; in each round every node sends one S/N chunk to its
+    ring successor (Gloo ``ring_chunked``, the paper's §III microbenchmark).
+    """
+    n = len(perm)
+    chunk = size / n
+    rounds = []
+    for _ in range(2 * (n - 1)):
+        rounds.append([Flow(_p(perm, r), _p(perm, r + 1), chunk) for r in range(n)])
+    return rounds
+
+
+def ring_allreduce_sequential(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """Naive ring: the full buffer circulates; one hop active per round.
+
+    This is the regime the paper's ring cost model C_r = sum_i c_{i,i-1}(S)
+    describes exactly (total = sum of per-hop costs of the full payload).
+    """
+    n = len(perm)
+    rounds = []
+    for _lap in range(2):  # reduce lap + broadcast lap, same hop sequence
+        for r in range(n - 1):
+            rounds.append([Flow(_p(perm, r), _p(perm, r + 1), size)])
+    return rounds
+
+
+def halving_doubling_allreduce(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """Recursive vector-halving distance-doubling RS + mirrored AG."""
+    n = len(perm)
+    assert n & (n - 1) == 0
+    log_n = int(np.log2(n))
+    rounds = []
+    # reduce-scatter: payload halves each round
+    for i in range(log_n):
+        flows = []
+        for j in range(n):
+            partner = j ^ (1 << i)
+            flows.append(Flow(_p(perm, j), _p(perm, partner), size / (2 ** (i + 1))))
+        rounds.append(flows)
+    # all-gather: mirror
+    for i in reversed(range(log_n)):
+        flows = []
+        for j in range(n):
+            partner = j ^ (1 << i)
+            flows.append(Flow(_p(perm, j), _p(perm, partner), size / (2 ** (i + 1))))
+        rounds.append(flows)
+    return rounds
+
+
+def _balanced_tree_edges(lo: int, hi: int) -> List[tuple]:
+    """(parent, child, depth) edges of the balanced tree over [lo, hi]."""
+    out = []
+
+    def rec(lo: int, hi: int, depth: int) -> int:
+        mid = (lo + hi) // 2
+        if lo <= mid - 1:
+            c = rec(lo, mid - 1, depth + 1)
+            out.append((mid, c, depth))
+        if mid + 1 <= hi:
+            c = rec(mid + 1, hi, depth + 1)
+            out.append((mid, c, depth))
+        return mid
+
+    rec(lo, hi, 0)
+    return out
+
+
+def double_binary_tree_allreduce(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """Two complementary trees, each reducing+broadcasting S/2.
+
+    The trees run CONCURRENTLY (that is the point of the double tree:
+    together they use full bisection bandwidth), so each round holds the
+    same-depth edges of *both* trees.  Reduce goes leaf->root, broadcast
+    root->leaf (NCCL-style, paper §II-B Tree).
+    """
+    n = len(perm)
+    edges = _balanced_tree_edges(0, n - 1)
+    max_depth = max((d for _, _, d in edges), default=0)
+    trees = [
+        [((p - shift) % n, (c - shift) % n, d) for p, c, d in edges]
+        for shift in (0, 1)
+    ]
+    rounds: List[List[Flow]] = []
+    for d in range(max_depth, -1, -1):   # reduce: deepest first
+        flows = [
+            Flow(_p(perm, c), _p(perm, p), size / 2)
+            for tree in trees
+            for p, c, dd in tree
+            if dd == d
+        ]
+        if flows:
+            rounds.append(flows)
+    for d in range(0, max_depth + 1):    # broadcast: root out
+        flows = [
+            Flow(_p(perm, p), _p(perm, c), size / 2)
+            for tree in trees
+            for p, c, dd in tree
+            if dd == d
+        ]
+        if flows:
+            rounds.append(flows)
+    return rounds
+
+
+def bcube_allreduce(perm: Sequence[int], size: float, base: int = 4) -> List[List[Flow]]:
+    n = len(perm)
+    n_rounds, m = 0, 1
+    while m < n:
+        m *= base
+        n_rounds += 1
+    assert m == n
+    rounds = []
+    for i in range(n_rounds):
+        stride = base ** i
+        flows = []
+        for j in range(n):
+            digit = (j // stride) % base
+            for k in range(1, base):
+                partner = j + (((digit + k) % base) - digit) * stride
+                flows.append(Flow(_p(perm, j), _p(perm, partner), size / (base ** (i + 1))))
+        rounds.append(flows)
+    return rounds
+
+
+def all_to_all(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """Shift-scheduled all-to-all; every node holds S split N ways."""
+    n = len(perm)
+    rounds = []
+    for k in range(1, n):
+        rounds.append([Flow(_p(perm, j), _p(perm, j + k), size / n) for j in range(n)])
+    return rounds
+
+
+SCHEDULES = {
+    "ring": ring_allreduce_chunked,
+    "ring_sequential": ring_allreduce_sequential,
+    "halving_doubling": halving_doubling_allreduce,
+    "double_binary_tree": double_binary_tree_allreduce,
+    "bcube": bcube_allreduce,
+    "all_to_all": all_to_all,
+}

@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, batches, host_batch, make_global_batch  # noqa: F401

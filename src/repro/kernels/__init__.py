@@ -1,0 +1,9 @@
+from .ops import (  # noqa: F401
+    attention_op,
+    fused_add,
+    on_tpu,
+    ring_all_reduce,
+    ring_reduce_scatter,
+    wkv_chunked_op,
+    wkv_op,
+)

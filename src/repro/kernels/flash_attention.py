@@ -1,0 +1,138 @@
+"""Flash attention Pallas TPU kernel (causal / full / sliding-window, GQA).
+
+TPU adaptation notes (DESIGN.md §6): the GPU flash algorithm maps to TPU
+as a *sequential* accumulation over the K grid dimension — TPU grids
+execute minor-most-first in order on each core, so the online-softmax
+running stats (m, l, acc) live in VMEM scratch across K iterations
+instead of GPU shared memory within one block.  BlockSpecs tile
+``[block_q, head_dim]`` / ``[block_k, head_dim]`` windows into VMEM and
+the per-tile ``q @ k^T`` / ``p @ v`` contractions are MXU-shaped
+(block sizes default to 128 = MXU width).
+
+GQA is handled in the index maps: the K/V BlockSpecs map query head ``h``
+to kv head ``h // group_size`` — no head-replication in HBM.
+
+Validated in interpret mode against :mod:`repro.kernels.ref` over a
+shape/dtype sweep (tests/test_kernels_flash.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, sm_scale: float, causal: bool, window: int,
+    block_q: int, block_k: int, n_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)           # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)           # [bk, hd]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale  # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    rel = q_pos - k_pos
+    if causal or window:
+        mask = rel >= 0 if causal else jnp.ones_like(rel, dtype=jnp.bool_)
+        if window:
+            mask = jnp.logical_and(mask, rel < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # [bq]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)         # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,            # [B, H, S, hd]
+    k: jnp.ndarray,            # [B, KV, S, hd]
+    v: jnp.ndarray,            # [B, KV, S, hd]
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q = S // block_q
+    n_k = S // block_k
+
+    grid = (B, H, n_q, n_k)
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "wkv_chunk_ref", "ring_reduce_scatter_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,            # [B, H, S, hd]
+    k: jnp.ndarray,            # [B, KV, S, hd]
+    v: jnp.ndarray,            # [B, KV, S, hd]
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qh, k.astype(jnp.float32)) * sm_scale
+    pos = jnp.arange(S)
+    rel = pos[:, None] - pos[None, :]
+    mask = rel >= 0 if causal else jnp.ones_like(rel, dtype=bool)
+    if window:
+        mask = mask & (rel < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def wkv_chunk_ref(
+    r: jnp.ndarray,   # [B, S, H, K]
+    k: jnp.ndarray,   # [B, S, H, K]
+    v: jnp.ndarray,   # [B, S, H, V]
+    w: jnp.ndarray,   # [B, S, H, K]  decay in (0,1)
+    u: jnp.ndarray,   # [H, K]
+    state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token WKV recurrence (identical to models.rwkv6)."""
+    from repro.models.rwkv6 import wkv_recurrence
+
+    return wkv_recurrence(r, k, v, w, u, state)
+
+
+def ring_reduce_scatter_ref(x: jnp.ndarray, n_shards: int, axis: int = 0
+                            ) -> jnp.ndarray:
+    """Reduce-scatter semantics oracle: sum over shards, split along axis.
+
+    x: [n_shards, ...] stacked per-device contributions; returns the
+    stacked per-device results [n_shards, chunk, ...].
+    """
+    total = jnp.sum(x, axis=0)                       # the all-reduced value
+    chunks = jnp.split(total, n_shards, axis=axis)
+    return jnp.stack(chunks)

@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+``input_specs`` builds weak-type-correct, sharding-annotated stand-ins
+for every input of the lowered step function — no device allocation, so
+the 236B-parameter cells lower on a CPU host.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ModelConfig, ShapeSpec
+from repro.models import get_model
+from repro.optim import init_opt
+from repro.parallel import sharding as shd
+from repro.train.train_step import TrainState, state_pspecs
+
+__all__ = ["input_specs", "step_callable"]
+
+
+def _with_sharding(shapes: Any, pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        shapes, pspecs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+def configure_sp(cfg: ModelConfig, mesh: Mesh) -> None:
+    """Arm sequence-parallel + expert-parallel contexts (trace-time)."""
+    from repro.models import layers as L
+    from repro.parallel.moe_a2a import arm_ep, clear_ep
+
+    sizes = shd.mesh_axis_sizes(mesh)
+    if cfg.sequence_parallel and sizes.get("model", 1) > 1:
+        L.set_sequence_parallel(shd.dp_axes(mesh), "model", sizes["model"])
+    else:
+        L.clear_sequence_parallel()
+    if cfg.n_experts and sizes.get("data", 1) > 1:
+        arm_ep(mesh, "data",
+               "model" if sizes.get("model", 1) > 1 else None)
+    else:
+        clear_ep()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Tuple[Any, ...]:
+    """ShapeDtypeStructs (sharded) for the step function of this cell."""
+    import numpy as np
+
+    model = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    sizes = shd.mesh_axis_sizes(mesh)
+    dp_names = shd.dp_axes(mesh)
+    dp_total = int(np.prod([sizes[a] for a in dp_names])) if dp_names else 1
+    # batch=1 decode (long_500k) cannot shard the batch dim
+    dp = shd.batch_spec(mesh) if (dp_total and B % dp_total == 0) else P(None)
+    tok2 = P(*dp, None)
+    tok1 = P(*dp)
+
+    def frontend_shapes() -> Dict[str, jax.ShapeDtypeStruct]:
+        extra = {}
+        if cfg.family == "vlm":
+            extra["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec":
+            extra["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_ctx, cfg.d_model), jnp.dtype(cfg.dtype))
+        return extra
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: TrainState(
+                params=model.init(jax.random.PRNGKey(0)),
+                opt=init_opt(model.init(jax.random.PRNGKey(0))),
+                step=jnp.zeros((), jnp.int32),
+            ))
+        s_specs = state_pspecs(state_shapes, cfg, mesh)
+        state_sds = _with_sharding(state_shapes, s_specs, mesh)
+        batch_shapes: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        batch_shapes.update(frontend_shapes())
+        b_specs = {
+            k: P(*dp, *([None] * (v.ndim - 1))) for k, v in batch_shapes.items()
+        }
+        batch_sds = _with_sharding(batch_shapes, b_specs, mesh)
+        return state_sds, batch_sds
+
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = shd.param_pspecs(params_shapes, cfg, mesh)
+    params_sds = _with_sharding(params_shapes, p_specs, mesh)
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_sds = _with_sharding(tokens, tok2, mesh)
+        extra = frontend_shapes()
+        if extra:
+            fe = list(extra.values())[0]
+            fe_sds = _with_sharding(fe, P(*dp, None, None), mesh)
+            return params_sds, tok_sds, fe_sds
+        return params_sds, tok_sds
+
+    # decode: one new token against an S-long cache
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    c_specs = shd.cache_pspecs(cache_shapes, cfg, mesh)
+    cache_sds = _with_sharding(cache_shapes, c_specs, mesh)
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sds = _with_sharding(tokens, tok1, mesh)
+    return params_sds, tok_sds, cache_sds
+
+
+def step_callable(cfg: ModelConfig, shape: ShapeSpec):
+    """The function each cell lowers: train_step / prefill / serve_step."""
+    from repro.optim import AdamWConfig
+    from repro.train.train_step import make_train_step
+
+    model = get_model(cfg)
+    if shape.kind == "train":
+        return make_train_step(model, AdamWConfig())
+    if shape.kind == "prefill":
+        if cfg.family in ("vlm", "encdec"):
+            return lambda params, tokens, fe: model.prefill(params, tokens, fe)
+        return lambda params, tokens: model.prefill(params, tokens)
+    return lambda params, tokens, cache: model.decode_step(params, tokens, cache)

@@ -1,0 +1,1 @@
+from .model_zoo import get_model  # noqa: F401

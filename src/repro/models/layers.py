@@ -1,0 +1,674 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Parameters are plain nested dicts of jnp arrays; every function is
+``f(params, inputs, config) -> outputs`` so the same code paths lower
+under jit/pjit with any sharding.  Blocks are written so layer-stacked
+parameters (leading ``L`` dim) can be scanned (small HLO — essential for
+compiling 40-60-layer models on the CPU dry-run).
+
+Conventions:
+* attention weights: ``wq [D, H*hd]``, ``wk/wv [D, KV*hd]``, ``wo [H*hd, D]``
+* gated MLP: ``w1 (gate) [D, F]``, ``w3 (up) [D, F]``, ``w2 (down) [F, D]``
+* MoE experts carry a leading ``E`` dim; shared experts are a fused MLP.
+* KV caches: ``{'k': [B, KV, S_max, hd], 'v': [B, KV, S_max, hd]}``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "dense_init", "rms_norm", "layer_norm", "make_rope", "apply_rope",
+    "attention", "attention_decode", "mlp", "moe_dense", "moe_scatter",
+    "moe_layer", "mla_attention", "mla_attention_decode",
+    "init_attention", "init_mlp", "init_moe", "init_mla",
+]
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sequence parallelism (SP)
+# ---------------------------------------------------------------------------
+# With TP, activations between blocks are replicated across the model axis,
+# so the remat-saved per-layer stack costs B_loc * S * d * L — the Megatron
+# sequence-parallel fix shards the inter-block activation over the model
+# axis on the S dim.  The mesh context is configured at trace time by the
+# launcher (specs/train drivers); when unset this is a no-op, so model code
+# stays mesh-agnostic.
+
+_SP_STATE = {"dp": None, "tp": None, "tp_size": 1}
+
+
+def set_sequence_parallel(dp_axes, tp_axis, tp_size) -> None:
+    _SP_STATE.update(dp=tuple(dp_axes) if dp_axes else None,
+                     tp=tp_axis, tp_size=tp_size)
+
+
+def clear_sequence_parallel() -> None:
+    _SP_STATE.update(dp=None, tp=None, tp_size=1)
+
+
+def sp_constrain(x: jnp.ndarray) -> jnp.ndarray:
+    """Constrain [B, S, D] activations to (dp, model, None) sharding."""
+    tp = _SP_STATE["tp"]
+    if tp is None or x.ndim != 3 or x.shape[1] % max(_SP_STATE["tp_size"], 1):
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    dp = _SP_STATE["dp"] or ()
+    return jax.lax.with_sharding_constraint(x, P(dp, tp, None))
+
+
+def sp_shard_heads(t: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Pin [B, H, S, d] tensors to head-sharding over the model axis."""
+    tp = _SP_STATE["tp"]
+    if tp is None or t.ndim != 4 or n_heads % max(_SP_STATE["tp_size"], 1):
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    dp = _SP_STATE["dp"] or ()
+    return jax.lax.with_sharding_constraint(t, P(dp, tp, None, None))
+
+
+def sp_head_constrain(head: jnp.ndarray) -> jnp.ndarray:
+    """Pin [D, V] unembedding to vocab-sharding over the model axis."""
+    tp = _SP_STATE["tp"]
+    if tp is None or head.ndim != 2 or head.shape[1] % max(_SP_STATE["tp_size"], 1):
+        return head
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(head, P(None, tp))
+
+
+def sp_gather_kv(k: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Force [B, KV, S, hd] K/V into gathered-S, head-sharded layout."""
+    tp = _SP_STATE["tp"]
+    if tp is None or k.ndim != 4:
+        return k
+    from jax.sharding import PartitionSpec as P
+
+    dp = _SP_STATE["dp"] or ()
+    heads = tp if k.shape[1] % max(_SP_STATE["tp_size"], 1) == 0 else None
+    return jax.lax.with_sharding_constraint(k, P(dp, heads, None, None))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def _split(rng, n):
+    return jax.random.split(rng, n)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Mixed-precision RMSNorm: the variance reduction runs in f32 but the
+    (large) normalized product stays in x.dtype — keeps XLA from
+    materializing an f32 copy of the activation as a scan residual."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * scale * w.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def make_rope(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for ``positions`` [..., S] -> [..., S, dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, S, hd]; cos/sin: [S, hd/2] or [B, S, hd/2] (half-split)."""
+    if cos.ndim == 2:
+        cos = cos[None, None, :, :]
+        sin = sin[None, None, :, :]
+    else:
+        cos = cos[:, None, :, :]
+        sin = sin[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (XLA path; the Pallas flash kernel plugs in via kernels/ops)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    r = _split(rng, 5)
+    p = {
+        "wq": dense_init(r[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(r[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(r[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(r[3], (h * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, kv, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int = 0,
+          q_positions=None, kv_positions=None, q_chunk: int = 0) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention, f32 softmax.
+
+    q: [B, H, Sq, hd]; k/v: [B, KV, Sk, hd] with H % KV == 0.
+
+    ``q_chunk`` > 0 enables blockwise evaluation over query chunks
+    (lax.map), bounding the transient [.., q_chunk, Sk] score tensor —
+    the XLA-path analogue of flash attention's memory behavior (the
+    Pallas kernel in repro.kernels is the TPU fast path).
+    """
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qp = q_positions if q_positions is not None else jnp.arange(Sq)
+    kp = kv_positions if kv_positions is not None else jnp.arange(k.shape[2])
+
+    def block(q_blk, qp_blk):
+        # q_blk: [B, KV, G, c, hd]
+        scores = jnp.einsum("bkgqd,bksd->bkgqs", q_blk, k).astype(jnp.float32)
+        scores = scores / math.sqrt(hd)
+        if causal or window:
+            rel = qp_blk[:, None] - kp[None, :]
+            mask = rel >= 0 if causal else jnp.ones_like(rel, dtype=bool)
+            if window:
+                mask = mask & (rel < window)
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bksd->bkgqd", probs, v)
+
+    qg = q.reshape(B, KV, G, Sq, hd)
+    if q_chunk and Sq > 2 * q_chunk and Sq % q_chunk == 0:
+        n = Sq // q_chunk
+        qc = qg.reshape(B, KV, G, n, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+        qpc = qp.reshape(n, q_chunk)
+        # checkpoint per chunk: the backward pass re-derives each chunk's
+        # [.., q_chunk, Sk] scores instead of stacking all chunks' scores
+        # as scan residuals (which would reintroduce the O(S^2) buffer).
+        out = jax.lax.map(lambda t: jax.checkpoint(block)(*t), (qc, qpc))
+        out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, Sq, -1)
+    else:
+        out = block(qg, qp)
+    return out.reshape(B, H, Sq, v.shape[-1])
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    use_rope: bool = True,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence attention.  Returns (out [B,S,D], kv for caching).
+
+    ``kv_override`` switches to cross-attention (whisper decoder): k/v are
+    projected from the override source instead of x.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    if kv_override is not None:
+        q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        src = kv_override[0]
+        Sk = src.shape[1]
+        k = (src @ p["wk"]).reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = (src @ p["wv"]).reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        out = _sdpa(q, k, v, causal=False, q_chunk=cfg.attn_q_chunk)
+    else:
+        q, k, v = _qkv(p, x, cfg)
+        if use_rope:
+            cos, sin = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        if cfg.attn_q_chunk and getattr(cfg, "hoist_kv_gather", True):
+            # Under SP, k/v inherit the S-sharding of x; the q-chunk map
+            # closes over them and XLA places the (S) all-gather INSIDE
+            # the loop — one gather per chunk (measured 27x collective
+            # amplification, EXPERIMENTS.md §Perf-3).  Re-assert the
+            # gathered layout here so the gather is hoisted above the map.
+            k = sp_gather_kv(k, cfg)
+            v = sp_gather_kv(v, cfg)
+        out = _sdpa(q, k, v, causal=causal, window=window,
+                    q_positions=positions, kv_positions=positions,
+                    q_chunk=cfg.attn_q_chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
+def attention_decode(
+    p: Params,
+    x: jnp.ndarray,                 # [B, 1, D]
+    cache: Dict[str, jnp.ndarray],  # k/v: [B, KV, S_max, hd]
+    pos: jnp.ndarray,               # scalar int32: write index
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode with KV-cache update."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, cfg)
+    if use_rope:
+        cos, sin = make_rope(pos[None], cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, pos, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, pos, 0))
+    S_max = k.shape[2]
+    kp = jnp.arange(S_max)
+    valid = kp <= pos
+    if window:
+        valid = valid & (kp > pos - window)
+    KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(B, KV, G, 1, cfg.head_dim)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qh, k).astype(jnp.float32)
+    scores = scores / math.sqrt(cfg.head_dim)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v)
+    out = out.reshape(B, cfg.n_heads, 1, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d: int, f: int, dtype) -> Params:
+    r = _split(rng, 3)
+    return {
+        "w1": dense_init(r[0], (d, f), dtype=dtype),
+        "w3": dense_init(r[1], (d, f), dtype=dtype),
+        "w2": dense_init(r[2], (f, d), dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> Params:
+    d, fe, E = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    r = _split(rng, 5)
+    p = {
+        "router": dense_init(r[0], (d, E), scale=0.02, dtype=jnp.float32),
+        "w1": dense_init(r[1], (E, d, fe), dtype=dtype),
+        "w3": dense_init(r[2], (E, d, fe), dtype=dtype),
+        "w2": dense_init(r[3], (E, fe, d), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(r[4], d, fe * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _router_probs(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """top-k gating.  Returns (expert_idx [.., k], weights [.., k], aux_loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx, E).sum(-2) > 0).astype(jnp.float32),
+        axis=tuple(range(probs.ndim - 1)),
+    )
+    aux = E * jnp.sum(me * ce)
+    return idx, weights, aux
+
+
+def moe_dense(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Einsum one-hot dispatch with capacity (GShard/MaxText 'dropping').
+
+    x: [B, S, D].  Tokens are grouped into chunks of ``group`` along S so
+    the dispatch tensor [B, n_g, g, E, C] stays modest; its size (and
+    FLOPs) scale with g*k*cf — see DESIGN.md and EXPERIMENTS.md §Perf.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    group = min(getattr(cfg, "moe_group_size", 1024), S)
+    n_g = max(S // group, 1)
+    xg = x.reshape(B * n_g, group, D)
+    idx, w, aux = _router_probs(p, xg, cfg)           # [G, g, K]
+    C = max(int(math.ceil(group * K / E * cfg.capacity_factor)), K)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # [G, g, K, E]
+    # position of each (token, k) within its expert queue (GShard cumsum;
+    # f32 is exact for the integer-valued counts involved)
+    pos_e = jnp.cumsum(onehot.reshape(xg.shape[0], -1, E), axis=1).reshape(
+        xg.shape[0], group, K, E
+    ) - onehot
+    pos = jnp.einsum("gtke,gtke->gtk", pos_e, onehot).astype(jnp.int32)
+    # masks in activation dtype: the [G, g/E, C, ...] tensors below are
+    # the big ones — keeping them bf16 halves MoE activation memory
+    keep = (pos < C).astype(x.dtype)[..., None] * onehot.astype(x.dtype)
+    posc = jax.nn.one_hot(pos, C, dtype=x.dtype)                  # [G, g, K, C]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", keep, posc)          # [G, g, E, C]
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", w.astype(x.dtype), keep, posc)
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # [G, E, C, D]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xin, p["w3"])
+    xout = jnp.einsum("gecf,efd->gecd", h, p["w2"])               # [G, E, C, D]
+    y = jnp.einsum("gtec,gecd->gtd", combine, xout)
+    y = y.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x)
+    return y, aux
+
+
+def moe_scatter(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based (argsort + gather/scatter) dispatch: no O(g^2) one-hot.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf): replaces the
+    dispatch einsum's 2*T*(g*k*cf)*D FLOPs with O(T*k) index plumbing.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xf = x.reshape(T, D)
+    idx, w, aux = _router_probs(p, xf, cfg)           # [T, K]
+    C = max(int(math.ceil(T * K / E * cfg.capacity_factor)), K)
+
+    flat_e = idx.reshape(-1)                           # [T*K]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # position within expert segment
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_e = jnp.arange(T * K) - seg_start[sorted_e]
+    tok = order // K
+    keep = pos_in_e < C
+    slot = sorted_e * C + jnp.where(keep, pos_in_e, 0)
+
+    buf = jnp.zeros((E * C, D), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xf[tok], 0))
+    xin = buf.reshape(E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xin, p["w3"])
+    xout = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * C, D)
+
+    gathered = jnp.where(keep[:, None], xout[slot], 0)         # [T*K, D]
+    wk = w.reshape(-1)[order]
+    contrib = gathered * wk[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(contrib)
+    y = y.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x)
+    return y, aux
+
+
+def moe_layer(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.moe_impl == "a2a" and x.shape[1] > 1:
+        from repro.parallel.moe_a2a import ep_armed, moe_a2a
+
+        if ep_armed(cfg):
+            return moe_a2a(p, x, cfg)
+        # no armed EP mesh (single-device tests): dense fallback
+        return moe_dense(p, x, cfg)
+    # decode (S == 1): the weight-gathered a2a would re-gather every
+    # expert's weights per token step (~28 GB/step for deepseek) — the
+    # dense dispatch is tiny at one token per sequence and keeps expert
+    # weights resident (EXPERIMENTS §Perf-B note).
+    if cfg.moe_impl == "scatter":
+        return moe_scatter(p, x, cfg)
+    return moe_dense(p, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_head_dim
+    qr = cfg.qk_rope_head_dim
+    vh = cfg.v_head_dim
+    r = _split(rng, 8)
+    return {
+        "wq_a": dense_init(r[0], (d, cfg.q_lora_rank), dtype=dtype),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), dtype),
+        "wq_b": dense_init(r[1], (cfg.q_lora_rank, h * (qk + qr)), dtype=dtype),
+        "wkv_a": dense_init(r[2], (d, cfg.kv_lora_rank), dtype=dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        "wk_rope": dense_init(r[3], (d, qr), dtype=dtype),
+        "wkv_b": dense_init(r[4], (cfg.kv_lora_rank, h * (qk + vh)), dtype=dtype),
+        "wo": dense_init(r[5], (h * vh, d), dtype=dtype),
+    }
+
+
+def _mla_qkv(p: Params, x: jnp.ndarray, positions, cfg: ModelConfig):
+    """Projects MLA q/k/v WITHOUT materializing per-head full K.
+
+    Returns (q_nope [B,H,S,qk], q_rope [B,H,S,qr], k_nope [B,H,S,qk],
+    k_rope [B,S,qr] shared-head, v [B,H,S,vh], ckv).  Scores are computed
+    as the *sum of two einsums* — concatenating [k_nope | broadcast
+    k_rope] is mathematically identical but wrecks SPMD propagation (a
+    1-head broadcast + concat forced XLA to all-gather full-head f32 K:
+    measured 32 GB/layer/device on deepseek train; EXPERIMENTS §Perf-2b).
+    """
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    qk, qr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, h, qk + qr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    cos, sin = make_rope(positions, qr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = rms_norm(x @ p["wkv_a"], p["kv_norm"], cfg.norm_eps)    # [B,S,r_kv]
+    k_rope = (x @ p["wk_rope"]).reshape(B, S, 1, qr).transpose(0, 2, 1, 3)
+    k_rope = apply_rope(k_rope, cos, sin).squeeze(1)               # [B,S,qr]
+    kv = (ckv @ p["wkv_b"]).reshape(B, S, h, qk + vh).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :qk], kv[..., qk:]
+    # pin head sharding: the slice/transpose chain above loses the spec
+    # during backward propagation and XLA falls back to full-head f32
+    # all-gathers (measured 21 GB/layer/device; EXPERIMENTS §Perf-2b).
+    q_nope = sp_shard_heads(q_nope, h)
+    q_rope = sp_shard_heads(q_rope, h)
+    k_nope = sp_shard_heads(k_nope, h)
+    v = sp_shard_heads(v, h)
+    return q_nope, q_rope, k_nope, k_rope, v, ckv
+
+
+def _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, *, q_positions,
+              kv_positions, sm_scale, q_chunk: int = 0):
+    """Two-term MLA attention with optional blockwise q-chunking."""
+    B, H, Sq, _ = q_nope.shape
+    Sk = k_nope.shape[2]
+
+    def block(qn, qr_, qp):
+        s = (jnp.einsum("bhqd,bhsd->bhqs", qn, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhqd,bsd->bhqs", qr_, k_rope,
+                          preferred_element_type=jnp.float32)) * sm_scale
+        rel = qp[:, None] - kv_positions[None, :]
+        s = jnp.where(rel[None, None] >= 0, s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bhsd->bhqd", probs, v)
+
+    if q_chunk and Sq > 2 * q_chunk and Sq % q_chunk == 0:
+        n = Sq // q_chunk
+        qn = q_nope.reshape(B, H, n, q_chunk, -1).transpose(2, 0, 1, 3, 4)
+        qr_ = q_rope.reshape(B, H, n, q_chunk, -1).transpose(2, 0, 1, 3, 4)
+        qp = q_positions.reshape(n, q_chunk)
+        out = jax.lax.map(lambda t: jax.checkpoint(block)(*t), (qn, qr_, qp))
+        return out.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, -1)
+    return block(q_nope, q_rope, q_positions)
+
+
+def mla_attention(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Training/prefill MLA.  Cache is the *compressed* (ckv, k_rope)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q_nope, q_rope, k_nope, k_rope, v, ckv = _mla_qkv(p, x, positions, cfg)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    out = _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v,
+                    q_positions=positions, kv_positions=positions,
+                    sm_scale=scale, q_chunk=cfg.attn_q_chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.v_head_dim)
+    return out @ p["wo"], {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_attention_decode_absorbed(
+    p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray, cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Matrix-absorbed MLA decode (§Perf hillclimb; DeepSeek-V2 paper §2.1.2).
+
+    The naive decode re-expands per-head K/V from the latent cache —
+    an O(S * H * r_kv * (qk + vh)) matmul and an O(B * H * S * (qk + vh))
+    buffer per layer.  Absorbing ``wkv_b`` into the query/output paths
+    keeps *everything* in the rank-r_kv latent space:
+
+        scores = (q_nope @ W_uk) @ ckv^T + q_rope @ k_rope^T
+        out    = (probs @ ckv) @ W_uv
+
+    Per-token work on the S axis drops from H*S*(qk+vh+expansion) to
+    H*S*(r_kv + qr) + H*S*r_kv, and no [B, H, S, .] tensor is ever built.
+    """
+    B = x.shape[0]
+    h = cfg.n_heads
+    qk, qr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, 1, h, qk + qr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    cos, sin = make_rope(pos[None], qr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv_new = rms_norm(x @ p["wkv_a"], p["kv_norm"], cfg.norm_eps)
+    kr_new = (x @ p["wk_rope"]).reshape(B, 1, 1, qr).transpose(0, 2, 1, 3)
+    kr_new = apply_rope(kr_new, cos, sin).squeeze(1)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    # wkv_b [r_kv, H*(qk+vh)] -> W_uk [H, r_kv, qk], W_uv [H, r_kv, vh]
+    wkv_b = p["wkv_b"].reshape(r_kv, h, qk + vh)
+    w_uk, w_uv = wkv_b[..., :qk], wkv_b[..., qk:]
+
+    q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)        # [B,H,1,r_kv]
+    # bf16 operands, f32 accumulation: a post-sum astype(f32) would let
+    # XLA hoist the convert into the inputs, materializing f32 copies of
+    # the whole latent cache + weights (measured +10 GB/device).
+    scores = (
+        jnp.einsum("bhqr,bsr->bhqs", q_lat, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhqd,bsd->bhqs", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) / math.sqrt(qk + qr)
+    S_max = ckv.shape[1]
+    valid = jnp.arange(S_max) <= pos
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bhqr", probs, ckv)            # [B,H,1,r_kv]
+    out = jnp.einsum("bhqr,rhd->bhqd", ctx, w_uv)             # [B,H,1,vh]
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, h * vh)
+    return out @ p["wo"], {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_attention_decode(
+    p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray, cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Decode with the compressed cache: ckv [B, S_max, r_kv],
+    k_rope [B, S_max, qr].  K/V are re-expanded from the latent (the
+    'naive' MLA decode; ``cfg.mla_absorb`` switches to the absorbed
+    fast path — see :func:`mla_attention_decode_absorbed`)."""
+    if cfg.mla_absorb:
+        return mla_attention_decode_absorbed(p, x, cache, pos, cfg)
+    B = x.shape[0]
+    h = cfg.n_heads
+    qk, qr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, 1, h, qk + qr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    cos, sin = make_rope(pos[None], qr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv_new = rms_norm(x @ p["wkv_a"], p["kv_norm"], cfg.norm_eps)
+    kr_new = (x @ p["wk_rope"]).reshape(B, 1, 1, qr).transpose(0, 2, 1, 3)
+    kr_new = apply_rope(kr_new, cos, sin).squeeze(1)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    S_max = ckv.shape[1]
+    kv = (ckv @ p["wkv_b"]).reshape(B, S_max, h, qk + vh).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :qk], kv[..., qk:]
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (B, h, S_max, qr))], axis=-1)
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q_full, k_full).astype(jnp.float32)
+    scores = scores / math.sqrt(qk + qr)
+    valid = jnp.arange(S_max) <= pos
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bhsd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, h * vh)
+    return out @ p["wo"], {"ckv": ckv, "k_rope": k_rope}

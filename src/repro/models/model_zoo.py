@@ -1,0 +1,34 @@
+"""Model registry: config -> model instance with the uniform interface.
+
+Every model exposes::
+
+    init(rng) -> params
+    forward(params, tokens, frontend_embeds=None) -> (logits, aux)
+    loss(params, batch) -> scalar
+    prefill(params, tokens, frontend_embeds=None) -> (logits[B,V], cache)
+    decode_step(params, tokens[B], cache) -> (logits[B,V], cache')
+    init_cache(batch, s_max) -> cache
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+from .rglru import RecurrentGemmaLM
+from .rwkv6 import Rwkv6LM
+from .transformer import DecoderLM
+from .whisper import WhisperLM
+
+__all__ = ["get_model"]
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return Rwkv6LM(cfg)
+    if cfg.family == "hybrid":
+        return RecurrentGemmaLM(cfg)
+    if cfg.family == "encdec":
+        return WhisperLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,458 @@
+"""RecurrentGemma / Griffin — RG-LRU recurrent blocks + local attention.
+
+[arXiv:2402.19427]  Layer pattern cycles (R, R, A): two recurrent blocks
+per local-attention block.  The recurrent block is::
+
+    x -> GeLU(W_gate x)  *  RG-LRU(conv1d_4(W_in x))  -> W_out
+
+with the RG-LRU diagonal recurrence (c = 8)::
+
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = exp(-c * softplus(L) * r_t)     # data-dependent decay in (0,1)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The attention block is MQA (kv=1) with RoPE and a sliding window of 2048,
+so decode state is O(window) + O(d) per recurrent layer — this arch runs
+the ``long_500k`` cell (DESIGN.md §4).
+
+Simplification noted in DESIGN.md: Griffin produces the RG-LRU gates with
+block-diagonal projections; we use dense ``[d_rnn, d_rnn]`` ones.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+
+Params = Dict[str, Any]
+C_RGLRU = 8.0
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrence (oracle for any fused kernel; scan over time)
+# ---------------------------------------------------------------------------
+
+def rglru_recurrence(
+    x: jnp.ndarray,        # [B, S, D] (post-conv)
+    r_gate: jnp.ndarray,   # [B, S, D] sigmoid already applied
+    i_gate: jnp.ndarray,   # [B, S, D]
+    log_lambda: jnp.ndarray,  # [D] softplus'd decay parameter
+    h0: Optional[jnp.ndarray] = None,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Diagonal linear recurrence, chunk-checkpointed over time.
+
+    A flat scan saves f32 [S, B, D] step residuals for backward — the
+    dominant memory of the recurrentgemma train cell (EXPERIMENTS
+    §Perf-E).  Scanning over S/chunk checkpointed segments saves only the
+    per-segment carry (f32 [S/chunk, B, D]) and recomputes each segment's
+    steps during its own backward — a 1/chunk memory cut for one extra
+    forward of elementwise work.
+    """
+    B, S, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    log_a = (-C_RGLRU * log_lambda[None, None] * r_gate).astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # the gated input tolerates bf16 (it is added once, not compounded);
+    # the decay `a` stays f32 — it multiplies across up to S steps.
+    gated = ((i_gate * x).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))).astype(x.dtype)
+
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t.astype(jnp.float32)
+        return h, h
+
+    def segment(h, inp):
+        a_c, g_c = inp                        # [chunk, B, D] time-major
+        return jax.lax.scan(step, h, (a_c, g_c))
+
+    a_tm = a.transpose(1, 0, 2)
+    g_tm = gated.transpose(1, 0, 2)
+    if chunk and S % chunk == 0 and S > chunk:
+        n = S // chunk
+        a_ch = a_tm.reshape(n, chunk, B, D)
+        g_ch = g_tm.reshape(n, chunk, B, D)
+        h_last, ys = jax.lax.scan(
+            lambda h, inp: jax.checkpoint(segment)(h, inp), h0, (a_ch, g_ch))
+        ys = ys.reshape(S, B, D)
+    else:
+        h_last, ys = segment(h0, (a_tm, g_tm))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_last
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width W.  x: [B,S,D], w: [W,D].
+
+    Returns (y, new_state) with state = last W-1 inputs [B, W-1, D].
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : W - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # [B, S+W-1, D]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W)) + b
+    return y, xp[:, -(W - 1):]
+
+
+class RecurrentGemmaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = cfg.layer_kinds()                   # ('R','R','A',...)
+        self.pattern = cfg.block_pattern
+        self.n_groups, self.n_tail = divmod(cfg.n_layers, len(self.pattern))
+
+    # -- init -------------------------------------------------------------
+    def _init_rec_block(self, rng) -> Params:
+        cfg = self.cfg
+        d, dt = cfg.d_model, _dtype(cfg)
+        W = cfg.rglru_conv_width
+        r = jax.random.split(rng, 8)
+        return {
+            "norm": jnp.ones((d,), dt),
+            "w_gate": L.dense_init(r[0], (d, d), dtype=dt),
+            "w_in": L.dense_init(r[1], (d, d), dtype=dt),
+            "conv_w": L.dense_init(r[2], (W, d), scale=0.1, dtype=dt),
+            "conv_b": jnp.zeros((d,), dt),
+            "w_a": L.dense_init(r[3], (d, d), dtype=dt),
+            "b_a": jnp.zeros((d,), dt),
+            "w_x": L.dense_init(r[4], (d, d), dtype=dt),
+            "b_x": jnp.zeros((d,), dt),
+            "lam": jnp.full((d,), 0.7, dt),              # softplus -> decay
+            "w_out": L.dense_init(r[5], (d, d), dtype=dt),
+            "mlp_norm": jnp.ones((d,), dt),
+            "mlp": L.init_mlp(r[6], d, cfg.d_ff, dt),
+        }
+
+    def _init_attn_block(self, rng) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        r = jax.random.split(rng, 2)
+        return {
+            "norm": jnp.ones((cfg.d_model,), dt),
+            "attn": L.init_attention(r[0], cfg, dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.init_mlp(r[1], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def _init_group(self, rng) -> Params:
+        """One (R, R, A) super-block (scanned unit)."""
+        r = jax.random.split(rng, len(self.pattern))
+        out: Params = {}
+        for i, kind in enumerate(self.pattern):
+            key = f"{kind}{i}"
+            out[key] = (
+                self._init_rec_block(r[i]) if kind == "R"
+                else self._init_attn_block(r[i])
+            )
+        return out
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        r = jax.random.split(rng, 3 + self.n_groups + self.n_tail)
+        groups = [self._init_group(r[3 + i]) for i in range(self.n_groups)]
+        params: Params = {
+            "embed": L.dense_init(r[0], (cfg.vocab_size, cfg.d_model),
+                                  scale=0.02, dtype=dt),
+            "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": L.dense_init(r[1], (cfg.d_model, cfg.vocab_size),
+                                    scale=0.02, dtype=dt),
+        }
+        if self.n_tail:
+            params["tail"] = [
+                self._init_rec_block(r[3 + self.n_groups + i])
+                if self.pattern[i] == "R" else self._init_attn_block(
+                    r[3 + self.n_groups + i])
+                for i in range(self.n_tail)
+            ]
+        return params
+
+    # -- forward blocks -----------------------------------------------------
+    def _rec_block_fwd(self, p, x, h0=None, conv_state=None):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        gate = jax.nn.gelu(h @ p["w_gate"])
+        u = h @ p["w_in"]
+        u, new_conv = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+        r_gate = jax.nn.sigmoid(h @ p["w_a"] + p["b_a"])
+        i_gate = jax.nn.sigmoid(h @ p["w_x"] + p["b_x"])
+        lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+        y, new_h = rglru_recurrence(u, r_gate, i_gate, lam, h0)
+        x = x + (gate * y) @ p["w_out"]
+        m = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], m)
+        return x, new_h, new_conv
+
+    def _attn_block_fwd(self, p, x, positions):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        out, kv = L.attention(p["attn"], h, cfg, causal=True,
+                              positions=positions, window=cfg.attn_window)
+        x = x + out
+        m = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], m)
+        return x, kv
+
+    def _group_fwd(self, gp, x, positions):
+        if self.cfg.sequence_parallel:
+            x = L.sp_constrain(x)
+        for i, kind in enumerate(self.pattern):
+            p = gp[f"{kind}{i}"]
+            if kind == "R":
+                x, _, _ = self._rec_block_fwd(p, x)
+            else:
+                x, _ = self._attn_block_fwd(p, x, positions)
+        return x
+
+    def forward(self, params, tokens, frontend_embeds=None,
+                return_features=False):
+        cfg = self.cfg
+        x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+        positions = jnp.arange(tokens.shape[1])
+
+        def body(x, gp):
+            fn = self._group_fwd
+            if cfg.remat == "block":
+                fn = jax.checkpoint(fn, static_argnums=())
+            return fn(gp, x, positions), None
+
+        if cfg.use_scan:
+            x, _ = jax.lax.scan(body, x, params["groups"])
+        else:
+            n = jax.tree.leaves(params["groups"])[0].shape[0]
+            for i in range(n):
+                gp = jax.tree.map(lambda a: a[i], params["groups"])
+                x = self._group_fwd(gp, x, positions)
+        for i, p in enumerate(params.get("tail", [])):
+            if self.pattern[i] == "R":
+                x, _, _ = self._rec_block_fwd(p, x)
+            else:
+                x, _ = self._attn_block_fwd(p, x, positions)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if return_features:
+            return x, jnp.zeros((), jnp.float32)
+        return x @ params["lm_head"], jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from .transformer import lm_loss
+        feats, _ = self.forward(params, batch["tokens"], return_features=True)
+        return lm_loss(feats, params["lm_head"], batch["labels"],
+                       self.cfg.loss_chunk_size)
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int, dtype=None) -> Params:
+        """Recurrent state + ring-buffer window KV (O(window), not O(S))."""
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        W = cfg.attn_window
+        d = cfg.d_model
+        cw = cfg.rglru_conv_width - 1
+        n_rec_per_group = sum(1 for k in self.pattern if k == "R")
+        n_att_per_group = len(self.pattern) - n_rec_per_group
+
+        def group_cache(n):
+            return {
+                "h": jnp.zeros((n, n_rec_per_group, batch, d), jnp.float32),
+                "conv": jnp.zeros((n, n_rec_per_group, batch, cw, d), dt),
+                "k": jnp.zeros((n, n_att_per_group, batch, cfg.n_kv_heads,
+                                W, cfg.head_dim), dt),
+                "v": jnp.zeros((n, n_att_per_group, batch, cfg.n_kv_heads,
+                                W, cfg.head_dim), dt),
+            }
+
+        cache: Params = {
+            "groups": group_cache(self.n_groups),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        if self.n_tail:
+            n_rec_tail = sum(1 for k in self.pattern[: self.n_tail] if k == "R")
+            cache["tail_h"] = jnp.zeros((n_rec_tail, batch, d), jnp.float32)
+            cache["tail_conv"] = jnp.zeros((n_rec_tail, batch, cw, d), dt)
+        return cache
+
+    def _attn_decode_window(self, p, x, k_cache, v_cache, pos):
+        """MQA decode against a ring-buffer window cache.
+
+        Slot = pos % W; each slot's absolute position is reconstructed to
+        mask invalid (future/too-old/unwritten) entries.  K is stored
+        with RoPE already applied at its absolute position.
+        """
+        cfg = self.cfg
+        B = x.shape[0]
+        W = cfg.attn_window
+        h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+        q, k_new, v_new = L._qkv(p["attn"], h, cfg)
+        cos, sin = L.make_rope(pos[None], cfg.head_dim, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+        slot = pos % W
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, 0, slot, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, 0, slot, 0))
+        idx = jnp.arange(W)
+        base = pos - slot
+        abs_pos = jnp.where(idx <= slot, base + idx, base - W + idx)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qh = q.reshape(B, KV, G, 1, cfg.head_dim)
+        scores = jnp.einsum("bkgqd,bksd->bkgqs", qh, k_cache).astype(jnp.float32)
+        scores = scores / math.sqrt(cfg.head_dim)
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v_cache)
+        out = out.reshape(B, cfg.n_heads, 1, cfg.head_dim).transpose(0, 2, 1, 3)
+        out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+        x = x + out @ p["attn"]["wo"]
+        m = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        return x + L.mlp(p["mlp"], m), k_cache, v_cache
+
+    def _group_decode(self, gp, x, gc, pos):
+        ri = ai = 0
+        new_h, new_conv, new_k, new_v = [], [], [], []
+        for i, kind in enumerate(self.pattern):
+            p = gp[f"{kind}{i}"]
+            if kind == "R":
+                x, h, conv = self._rec_block_fwd(
+                    p, x, h0=gc["h"][ri], conv_state=gc["conv"][ri])
+                new_h.append(h)
+                new_conv.append(conv)
+                ri += 1
+            else:
+                x, k, v = self._attn_decode_window(
+                    p, x, gc["k"][ai], gc["v"][ai], pos)
+                new_k.append(k)
+                new_v.append(v)
+                ai += 1
+        return x, {
+            "h": jnp.stack(new_h) if new_h else gc["h"],
+            "conv": jnp.stack(new_conv) if new_conv else gc["conv"],
+            "k": jnp.stack(new_k) if new_k else gc["k"],
+            "v": jnp.stack(new_v) if new_v else gc["v"],
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = params["embed"][tokens][:, None, :] * math.sqrt(cfg.d_model)
+
+        def body(x, inp):
+            gp, gc = inp
+            x, nc = self._group_decode(gp, x, gc, pos)
+            return x, nc
+
+        if cfg.use_scan:
+            x, new_groups = jax.lax.scan(
+                body, x, (params["groups"], cache["groups"]))
+        else:
+            ncs = []
+            for i in range(self.n_groups):
+                inp = jax.tree.map(
+                    lambda a: a[i], (params["groups"], cache["groups"]))
+                x, nc = body(x, inp)
+                ncs.append(nc)
+            new_groups = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        new_cache: Params = {"groups": new_groups, "pos": pos + 1}
+
+        if self.n_tail:
+            hs, convs = [], []
+            ri = 0
+            for i, p in enumerate(params.get("tail", [])):
+                if self.pattern[i] == "R":
+                    x, h, conv = self._rec_block_fwd(
+                        p, x, h0=cache["tail_h"][ri],
+                        conv_state=cache["tail_conv"][ri])
+                    hs.append(h)
+                    convs.append(conv)
+                    ri += 1
+                else:  # pragma: no cover — pattern puts A last
+                    raise NotImplementedError
+            new_cache["tail_h"] = jnp.stack(hs)
+            new_cache["tail_conv"] = jnp.stack(convs)
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (x @ params["lm_head"])[:, 0], new_cache
+
+    def prefill(self, params, tokens, frontend_embeds=None):
+        """Prompt pass returning decode-ready state (window KV + h)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        W = cfg.attn_window
+        x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+        positions = jnp.arange(S)
+
+        def run_group(gp, x):
+            hs, convs, ks, vs = [], [], [], []
+            for i, kind in enumerate(self.pattern):
+                p = gp[f"{kind}{i}"]
+                if kind == "R":
+                    x, h, conv = self._rec_block_fwd(p, x)
+                    hs.append(h)
+                    convs.append(conv)
+                else:
+                    x, kv = self._attn_block_fwd(p, x, positions)
+                    # keep the last W positions, laid out ring-buffer style
+                    k, v = kv["k"], kv["v"]
+                    ks.append(_to_ring(k, W, S))
+                    vs.append(_to_ring(v, W, S))
+            return x, (jnp.stack(hs), jnp.stack(convs),
+                       jnp.stack(ks), jnp.stack(vs))
+
+        def body(x, gp):
+            x, out = run_group(gp, x)
+            return x, out
+
+        if cfg.use_scan:
+            x, (h, conv, k, v) = jax.lax.scan(body, x, params["groups"])
+        else:
+            outs = []
+            for i in range(self.n_groups):
+                gp = jax.tree.map(lambda a: a[i], params["groups"])
+                x, o = body(x, gp)
+                outs.append(o)
+            h, conv, k, v = (
+                jnp.stack([o[j] for o in outs]) for j in range(4))
+        cache: Params = {
+            "groups": {"h": h, "conv": conv, "k": k, "v": v},
+            "pos": jnp.asarray(S, jnp.int32),
+        }
+        if self.n_tail:
+            hs, convs = [], []
+            for i, p in enumerate(params.get("tail", [])):
+                x, hh, conv1 = self._rec_block_fwd(p, x)
+                hs.append(hh)
+                convs.append(conv1)
+            cache["tail_h"] = jnp.stack(hs)
+            cache["tail_conv"] = jnp.stack(convs)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (x[:, -1] @ params["lm_head"]), cache
+
+
+def _to_ring(k: jnp.ndarray, W: int, S: int) -> jnp.ndarray:
+    """Last-W slice of [B,KV,S,hd], arranged so slot i holds abs pos
+    with (abs % W) == i — matching the decode ring buffer layout."""
+    if S <= W:
+        pad = jnp.zeros(k.shape[:2] + (W - S,) + k.shape[3:], k.dtype)
+        return jnp.concatenate([k, pad], axis=2)
+    last = k[:, :, S - W :]                     # abs positions S-W .. S-1
+    # slot of abs position p is p % W; roll so that index i holds abs
+    # position with i == abs % W.
+    shift = (S - W) % W
+    return jnp.roll(last, shift, axis=2)

@@ -1,0 +1,324 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+[arXiv:2404.05892]  Per block: TimeMix (the WKV linear-attention state
+recurrence with LoRA-produced, *data-dependent* per-channel decay ``w_t``
+— Finch's contribution over Eagle) and ChannelMix (squared-ReLU FFN with
+token shift).
+
+State per layer is O(1) in sequence length — ``long_500k`` decode is a
+state update, which is why this arch (and the RG-LRU hybrid) are the two
+assigned archs that run the 500k cell (DESIGN.md §4).
+
+Training uses ``jax.lax.scan`` over time (XLA path); the blocked Pallas
+chunk-scan kernel in :mod:`repro.kernels.rwkv6_scan` is the TPU fast path
+validated against :func:`wkv_recurrence` as its oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+LORA_R = 32  # decay / token-shift LoRA rank (Finch uses 32-64 by size)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _shift(x: jnp.ndarray, init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros or carried state at t=0).  x: [B,S,D]."""
+    pad = jnp.zeros_like(x[:, :1]) if init is None else init[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence (the oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def wkv_recurrence(
+    r: jnp.ndarray,   # [B, S, H, K]
+    k: jnp.ndarray,   # [B, S, H, K]
+    v: jnp.ndarray,   # [B, S, H, V]
+    w: jnp.ndarray,   # [B, S, H, K]   decay in (0, 1), data dependent
+    u: jnp.ndarray,   # [H, K]         bonus for the current token
+    state: Optional[jnp.ndarray] = None,  # [B, H, K, V]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """y_t = r_t . (S_{t-1} + (u*k_t) outer v_t);  S_t = diag(w_t) S_{t-1} + k_t outer v_t."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., None] * v_t[..., None, :]          # [B,H,K,V]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., None] * S_ + kv
+        return S_, y
+
+    xs = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), state  # [B,S,H,V]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+class Rwkv6LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_heads = cfg.d_model // cfg.rwkv_head_dim
+        self.head_dim = cfg.rwkv_head_dim
+
+    # -- init -----------------------------------------------------------
+    def _init_block(self, rng) -> Params:
+        cfg = self.cfg
+        d, dt = cfg.d_model, _dtype(cfg)
+        H, K = self.n_heads, self.head_dim
+        r = jax.random.split(rng, 12)
+        tm = {
+            # static token-shift mixes + data-dependent LoRA (5 targets)
+            "maa_x": jnp.zeros((d,), dt),
+            "maa": jnp.zeros((5, d), dt),       # w, k, v, r, g
+            "maa_A": L.dense_init(r[0], (d, 5 * LORA_R), scale=0.01, dtype=dt),
+            "maa_B": L.dense_init(r[1], (5, LORA_R, d), scale=0.01, dtype=dt),
+            # decay: w = exp(-exp(w0 + tanh(xw @ A) @ B))
+            "w0": jnp.full((d,), -6.0, dt),
+            "wA": L.dense_init(r[2], (d, LORA_R * 2), scale=0.01, dtype=dt),
+            "wB": L.dense_init(r[3], (LORA_R * 2, d), scale=0.01, dtype=dt),
+            "u": jnp.zeros((H, K), dt),          # time_faaaa bonus
+            "wr": L.dense_init(r[4], (d, d), dtype=dt),
+            "wk": L.dense_init(r[5], (d, d), dtype=dt),
+            "wv": L.dense_init(r[6], (d, d), dtype=dt),
+            "wg": L.dense_init(r[7], (d, d), dtype=dt),
+            "wo": L.dense_init(r[8], (d, d), dtype=dt),
+            # per-head GroupNorm (faithful to RWKV's ln_x; also shard-local
+            # when heads are sharded over the model axis)
+            "ln_x_w": jnp.ones((H, K), dt),
+            "ln_x_b": jnp.zeros((H, K), dt),
+        }
+        cm = {
+            "maa_k": jnp.zeros((d,), dt),
+            "maa_r": jnp.zeros((d,), dt),
+            "wk": L.dense_init(r[9], (d, cfg.d_ff), dtype=dt),
+            "wv": L.dense_init(r[10], (cfg.d_ff, d), dtype=dt),
+            "wr": L.dense_init(r[11], (d, d), dtype=dt),
+        }
+        return {
+            "ln1": jnp.ones((d,), dt),
+            "ln2": jnp.ones((d,), dt),
+            "time_mix": tm,
+            "channel_mix": cm,
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        r = jax.random.split(rng, 3 + cfg.n_layers)
+        blocks = [self._init_block(r[3 + i]) for i in range(cfg.n_layers)]
+        return {
+            "embed": L.dense_init(r[0], (cfg.vocab_size, cfg.d_model),
+                                  scale=0.02, dtype=dt),
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": L.dense_init(r[1], (cfg.d_model, cfg.vocab_size),
+                                    scale=0.02, dtype=dt),
+        }
+
+    # -- time mix ---------------------------------------------------------
+    def _time_mix_inputs(self, p: Params, x, sx):
+        """Project token-shifted inputs to (r, k, v, w, g)."""
+        dx = sx - x
+        xxx = x + dx * p["maa_x"]
+        dd = jnp.tanh(xxx @ p["maa_A"])                       # [B,S,5R]
+        B_, S_, _ = dd.shape
+        dd = dd.reshape(B_, S_, 5, LORA_R).transpose(2, 0, 1, 3)
+        offsets = jnp.einsum("nbsr,nrd->nbsd", dd, p["maa_B"])  # [5,B,S,D]
+        mixed = x[None] + dx[None] * (p["maa"][:, None, None, :] + offsets)
+        x_w, x_k, x_v, x_r, x_g = mixed
+        r = x_r @ p["wr"]
+        k = x_k @ p["wk"]
+        v = x_v @ p["wv"]
+        g = jax.nn.silu(x_g @ p["wg"])
+        w = jnp.exp(-jnp.exp(
+            (p["w0"] + jnp.tanh(x_w @ p["wA"]) @ p["wB"]).astype(jnp.float32)
+        ))
+        return r, k, v, w, g
+
+    def _heads(self, t: jnp.ndarray) -> jnp.ndarray:
+        B, S, _ = t.shape
+        return t.reshape(B, S, self.n_heads, self.head_dim)
+
+    def _time_mix(self, p, x, sx_init=None, state=None):
+        cfg = self.cfg
+        B, S, d = x.shape
+        sx = _shift(x, sx_init)
+        r, k, v, w, g = self._time_mix_inputs(p, x, sx)
+        if (cfg.wkv_impl == "kernel" and state is None and S > 1
+                and S % 16 == 0):
+            # Pallas chunked matmul kernel (fresh-state training path;
+            # decode keeps the exact scan — it carries state)
+            from repro.kernels import wkv_chunked_op
+
+            y = wkv_chunked_op(
+                self._heads(r), self._heads(k), self._heads(v),
+                self._heads(w.astype(x.dtype)), p["u"])
+            new_state = jnp.zeros(
+                (B, self.n_heads, self.head_dim, self.head_dim), jnp.float32)
+        else:
+            y, new_state = wkv_recurrence(
+                self._heads(r), self._heads(k), self._heads(v),
+                self._heads(w.astype(x.dtype)), p["u"], state)
+        # per-head GroupNorm over the head_dim channels
+        yf = y.astype(jnp.float32)
+        mu = yf.mean(-1, keepdims=True)
+        var = yf.var(-1, keepdims=True)
+        yf = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = (yf * p["ln_x_w"].astype(jnp.float32)
+             + p["ln_x_b"].astype(jnp.float32)).astype(y.dtype)
+        y = y.reshape(B, S, d)
+        y = (y * g) @ p["wo"]
+        return y, x[:, -1], new_state
+
+    def _channel_mix(self, p, x, sx_init=None):
+        sx = _shift(x, sx_init)
+        dx = sx - x
+        x_k = x + dx * p["maa_k"]
+        x_r = x + dx * p["maa_r"]
+        k = jnp.square(jax.nn.relu(x_k @ p["wk"]))
+        out = jax.nn.sigmoid(x_r @ p["wr"]) * (k @ p["wv"])
+        return out, x[:, -1]
+
+    def _block(self, bp, x):
+        cfg = self.cfg
+        if cfg.sequence_parallel:
+            x = L.sp_constrain(x)
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        att, _, _ = self._time_mix(bp["time_mix"], h)
+        x = x + att
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        ffn, _ = self._channel_mix(bp["channel_mix"], h)
+        return x + ffn
+
+    # -- training ---------------------------------------------------------
+    def forward(self, params, tokens, frontend_embeds=None,
+                return_features=False):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        def body(x, bp):
+            fn = self._block
+            if cfg.remat == "block":
+                fn = jax.checkpoint(fn)
+            return fn(bp, x), None
+
+        if cfg.use_scan:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            n = jax.tree.leaves(params["blocks"])[0].shape[0]
+            for i in range(n):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, _ = body(x, bp)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if return_features:
+            return x, jnp.zeros((), jnp.float32)
+        return x @ params["lm_head"], jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from .transformer import lm_loss
+        feats, _ = self.forward(params, batch["tokens"], return_features=True)
+        return lm_loss(feats, params["lm_head"], batch["labels"],
+                       self.cfg.loss_chunk_size)
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int, dtype=None) -> Params:
+        """State cache: O(1) in context length (s_max unused — that is
+        the point of an SSM: the 500k cell costs the same as 1k)."""
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        H, K = self.n_heads, self.head_dim
+        n, d = cfg.n_layers, cfg.d_model
+        return {
+            "att_sx": jnp.zeros((n, batch, d), dt),
+            "ffn_sx": jnp.zeros((n, batch, d), dt),
+            "wkv": jnp.zeros((n, batch, H, K, K), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        x = params["embed"][tokens][:, None, :]  # [B,1,D]
+
+        def body(x, inp):
+            bp, att_sx, ffn_sx, wkv = inp
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            att, new_att_sx, new_wkv = self._time_mix(
+                bp["time_mix"], h, sx_init=att_sx, state=wkv)
+            x = x + att
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            ffn, new_ffn_sx = self._channel_mix(
+                bp["channel_mix"], h, sx_init=ffn_sx)
+            return x + ffn, (new_att_sx, new_ffn_sx, new_wkv)
+
+        xs = (params["blocks"], cache["att_sx"], cache["ffn_sx"], cache["wkv"])
+        if cfg.use_scan:
+            x, (att_sx, ffn_sx, wkv) = jax.lax.scan(body, x, xs)
+        else:
+            n = cfg.n_layers
+            outs = []
+            for i in range(n):
+                x, o = body(x, jax.tree.map(lambda a: a[i], xs))
+                outs.append(o)
+            att_sx, ffn_sx, wkv = (
+                jnp.stack([o[j] for o in outs]) for j in range(3))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["lm_head"])[:, 0]
+        return logits, {
+            "att_sx": att_sx, "ffn_sx": ffn_sx, "wkv": wkv,
+            "pos": cache["pos"] + 1,
+        }
+
+    def prefill(self, params, tokens, frontend_embeds=None):
+        """Run the recurrence over the prompt, return final state cache."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        def body(x, inp):
+            bp = inp
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            att, att_sx, wkv = self._time_mix(bp["time_mix"], h)
+            x = x + att
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            ffn, ffn_sx = self._channel_mix(bp["channel_mix"], h)
+            return x + ffn, (att_sx, ffn_sx, wkv)
+
+        if cfg.use_scan:
+            x, (att_sx, ffn_sx, wkv) = jax.lax.scan(body, x, params["blocks"])
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                x, o = body(x, jax.tree.map(lambda a: a[i], params["blocks"]))
+                outs.append(o)
+            att_sx, ffn_sx, wkv = (
+                jnp.stack([o[j] for o in outs]) for j in range(3))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x[:, -1] @ params["lm_head"])
+        return logits, {
+            "att_sx": att_sx, "ffn_sx": ffn_sx, "wkv": wkv,
+            "pos": jnp.asarray(tokens.shape[1], jnp.int32),
+        }

@@ -1,0 +1,279 @@
+"""Whisper — encoder/decoder speech transformer (conv frontend stubbed).
+
+[arXiv:2212.04356]  The convolutional mel-spectrogram frontend is a STUB
+per the assignment: ``input_specs()`` supplies precomputed frame
+embeddings ``[B, n_audio_ctx, d_model]``; everything after that (both
+transformer stacks, cross attention, LayerNorm+GELU as in the paper) is
+fully implemented.
+
+Serving: the decoder self-attn KV cache grows per step; encoder output
+and per-layer cross-attention K/V are computed once at prefill and reused
+every decode step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _sinusoids(length: int, channels: int) -> jnp.ndarray:
+    """Whisper's sinusoidal encoder positions."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    t = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def _gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _init_gelu_mlp(rng, d, f, dtype):
+    r = jax.random.split(rng, 2)
+    return {
+        "w1": L.dense_init(r[0], (d, f), dtype=dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": L.dense_init(r[1], (f, d), dtype=dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def _ln(rng_unused, d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+class WhisperLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init -------------------------------------------------------------
+    def _init_enc_block(self, rng) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        r = jax.random.split(rng, 2)
+        return {
+            "ln1": _ln(None, cfg.d_model, dt),
+            "attn": L.init_attention(r[0], cfg, dt),
+            "ln2": _ln(None, cfg.d_model, dt),
+            "mlp": _init_gelu_mlp(r[1], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def _init_dec_block(self, rng) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        r = jax.random.split(rng, 3)
+        return {
+            "ln1": _ln(None, cfg.d_model, dt),
+            "self_attn": L.init_attention(r[0], cfg, dt),
+            "ln_x": _ln(None, cfg.d_model, dt),
+            "cross_attn": L.init_attention(r[1], cfg, dt),
+            "ln2": _ln(None, cfg.d_model, dt),
+            "mlp": _init_gelu_mlp(r[2], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        n_enc = cfg.n_encoder_layers
+        r = jax.random.split(rng, 4 + n_enc + cfg.n_layers)
+        enc = [self._init_enc_block(r[4 + i]) for i in range(n_enc)]
+        dec = [self._init_dec_block(r[4 + n_enc + i]) for i in range(cfg.n_layers)]
+        return {
+            "embed": L.dense_init(r[0], (cfg.vocab_size, cfg.d_model),
+                                  scale=0.02, dtype=dt),
+            "dec_pos": L.dense_init(r[1], (cfg.max_positions, cfg.d_model),
+                                    scale=0.01, dtype=dt),
+            "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+            "enc_ln": _ln(None, cfg.d_model, dt),
+            "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+            "dec_ln": _ln(None, cfg.d_model, dt),
+        }
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, params: Params, audio_embeds: jnp.ndarray) -> jnp.ndarray:
+        """audio_embeds [B, n_audio_ctx, D] (stub frontend output)."""
+        cfg = self.cfg
+        x = audio_embeds + _sinusoids(
+            audio_embeds.shape[1], cfg.d_model).astype(audio_embeds.dtype)
+
+        def block(bp, x):
+            h = L.layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"], cfg.norm_eps)
+            out, _ = L.attention(bp["attn"], h, cfg, causal=False, use_rope=False)
+            x = x + out
+            h = L.layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"], cfg.norm_eps)
+            return x + _gelu_mlp(bp["mlp"], h)
+
+        def body(x, bp):
+            fn = jax.checkpoint(block) if cfg.remat == "block" else block
+            return fn(bp, x), None
+
+        if cfg.use_scan:
+            x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        else:
+            n = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
+            for i in range(n):
+                bp = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+                x, _ = body(x, bp)
+        return L.layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"],
+                            cfg.norm_eps)
+
+    # -- decoder ------------------------------------------------------------
+    def _dec_block(self, bp, x, enc_out, positions):
+        cfg = self.cfg
+        if cfg.sequence_parallel:
+            x = L.sp_constrain(x)
+        h = L.layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"], cfg.norm_eps)
+        out, kv = L.attention(bp["self_attn"], h, cfg, causal=True,
+                              positions=positions, use_rope=False)
+        x = x + out
+        h = L.layer_norm(x, bp["ln_x"]["w"], bp["ln_x"]["b"], cfg.norm_eps)
+        out, xkv = L.attention(bp["cross_attn"], h, cfg, kv_override=(enc_out,))
+        x = x + out
+        h = L.layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"], cfg.norm_eps)
+        return x + _gelu_mlp(bp["mlp"], h), kv, xkv
+
+    def forward(self, params, tokens, frontend_embeds=None,
+                return_features=False):
+        """Teacher-forced training: tokens [B,S] + audio stub [B,A,D]."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frontend_embeds)
+        S = tokens.shape[1]
+        x = params["embed"][tokens] + params["dec_pos"][:S].astype(_dtype(cfg))
+        positions = jnp.arange(S)
+
+        def block(bp, x):
+            x, _, _ = self._dec_block(bp, x, enc_out, positions)
+            return x
+
+        def body(x, bp):
+            fn = jax.checkpoint(block) if cfg.remat == "block" else block
+            return fn(bp, x), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"],
+                         cfg.norm_eps)
+        if return_features:
+            return x, jnp.zeros((), jnp.float32)
+        return x @ params["embed"].T, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        from .transformer import lm_loss
+        feats, _ = self.forward(
+            params, batch["tokens"], batch["frontend_embeds"],
+            return_features=True)
+        return lm_loss(feats, params["embed"].T, batch["labels"],
+                       self.cfg.loss_chunk_size)
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int, dtype=None) -> Params:
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        n, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        A = cfg.n_audio_ctx
+        return {
+            "k": jnp.zeros((n, batch, kv, s_max, hd), dt),
+            "v": jnp.zeros((n, batch, kv, s_max, hd), dt),
+            "xk": jnp.zeros((n, batch, kv, A, hd), dt),
+            "xv": jnp.zeros((n, batch, kv, A, hd), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, tokens, frontend_embeds=None):
+        """Encode audio + teacher-forced pass over the prompt tokens."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frontend_embeds)
+        B, S = tokens.shape
+        x = params["embed"][tokens] + params["dec_pos"][:S].astype(_dtype(cfg))
+        positions = jnp.arange(S)
+
+        def body(x, bp):
+            x, kv, xkv = self._dec_block(bp, x, enc_out, positions)
+            return x, (kv["k"], kv["v"], xkv["k"], xkv["v"])
+
+        if cfg.use_scan:
+            x, (k, v, xk, xv) = jax.lax.scan(body, x, params["dec_blocks"])
+        else:
+            n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+            ks, vs, xks, xvs = [], [], [], []
+            for i in range(n):
+                bp = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+                x, kv, xkv = self._dec_block(bp, x, enc_out, positions)
+                ks.append(kv["k"]); vs.append(kv["v"])
+                xks.append(xkv["k"]); xvs.append(xkv["v"])
+            k, v = jnp.stack(ks), jnp.stack(vs)
+            xk, xv = jnp.stack(xks), jnp.stack(xvs)
+        x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"],
+                         cfg.norm_eps)
+        logits = x[:, -1] @ params["embed"].T
+        return logits, {
+            "k": k, "v": v, "xk": xk, "xv": xv,
+            "pos": jnp.asarray(S, jnp.int32),
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = params["embed"][tokens][:, None, :]
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0).astype(x.dtype)
+
+        def body(x, inp):
+            bp, k, v, xk, xv = inp
+            h = L.layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"], cfg.norm_eps)
+            out, nc = L.attention_decode(
+                bp["self_attn"], h, {"k": k, "v": v}, pos, cfg, use_rope=False)
+            x = x + out
+            h = L.layer_norm(x, bp["ln_x"]["w"], bp["ln_x"]["b"], cfg.norm_eps)
+            out = _cross_decode(bp["cross_attn"], h, xk, xv, cfg)
+            x = x + out
+            h = L.layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"], cfg.norm_eps)
+            x = x + _gelu_mlp(bp["mlp"], h)
+            return x, (nc["k"], nc["v"])
+
+        if cfg.use_scan:
+            x, (k, v) = jax.lax.scan(
+                body, x,
+                (params["dec_blocks"], cache["k"], cache["v"],
+                 cache["xk"], cache["xv"]))
+        else:
+            n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+            ks, vs = [], []
+            for i in range(n):
+                inp = jax.tree.map(
+                    lambda a: a[i],
+                    (params["dec_blocks"], cache["k"], cache["v"],
+                     cache["xk"], cache["xv"]))
+                x, (ki, vi) = body(x, inp)
+                ks.append(ki)
+                vs.append(vi)
+            k, v = jnp.stack(ks), jnp.stack(vs)
+        x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"],
+                         cfg.norm_eps)
+        logits = (x @ params["embed"].T)[:, 0]
+        return logits, {
+            "k": k, "v": v, "xk": cache["xk"], "xv": cache["xv"],
+            "pos": pos + 1,
+        }
+
+
+def _cross_decode(p, x, xk, xv, cfg: ModelConfig):
+    """Single-query cross attention against precomputed enc K/V."""
+    B = x.shape[0]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = L._sdpa(q, xk, xv, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"]

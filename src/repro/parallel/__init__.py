@@ -1,0 +1,10 @@
+from .pipeline import pipeline_forward, pipeline_loss  # noqa: F401
+from .sharding import (  # noqa: F401
+    batch_spec,
+    cache_pspecs,
+    dp_axes,
+    mesh_axis_sizes,
+    named_shardings,
+    param_pspecs,
+    zero1_spec,
+)

@@ -1,0 +1,219 @@
+"""Expert-parallel MoE via shard_map + explicit all-to-all (§Perf).
+
+The baseline einsum-dispatch MoE (GShard-style, ``moe_impl='dense'``)
+leaves the big [G, E, C, D] buffers to XLA's SPMD partitioner, which —
+with experts on the 'data' axis and tokens on the same axis — resolves
+the conflict with replication + all-gathers (measured: the dominant
+memory AND collective term of the dbrx/deepseek train cells; see
+EXPERIMENTS.md §Perf-2).
+
+This implementation takes manual control (``moe_impl='a2a'``), a
+*weight-gathered* EP design suited to fine-grained experts:
+
+1. tokens stay where they are: batch over the DP axes, sequence over the
+   'model' axis (SP preserved); routing is computed locally per column;
+2. each (token, k) choice is packed into a capacity-bounded
+   ``[n_ep, C, D]`` buffer and ``jax.lax.all_to_all``'d over the EP
+   ('data') axis — the exact communication pattern the paper's
+   ``AllToAllCost`` prices, so the solved rank order of the data axis
+   directly speeds this collective;
+3. expert weights (small for fine-grained experts: deepseek d_ff 1536,
+   ~0.5 GB/layer/row) are all-gathered over 'model', so every received
+   token runs the FULL expert FFN locally — no cross-column psum, no
+   second all-to-all detour;
+4. results all-to-all back; weighted combine at the source.
+
+Wire bytes per device per layer: 2 * n_ep * C * D (the a2a pair) + the
+expert-weight gather; FLOPs: zero dispatch einsums (integer sorts only).
+
+Gradients flow through shard_map / all_to_all / scatter natively.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["arm_ep", "clear_ep", "ep_armed", "moe_a2a"]
+
+_EP_STATE: Dict[str, Any] = {"mesh": None, "ep": None, "tp": None, "dp": ()}
+
+
+def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model"):
+    dp = tuple(a for a in ("pod",) if a in mesh.axis_names)
+    _EP_STATE.update(
+        mesh=mesh,
+        ep=ep_axis if ep_axis in mesh.axis_names else None,
+        tp=tp_axis if tp_axis and tp_axis in mesh.axis_names else None,
+        dp=dp,
+    )
+
+
+def clear_ep():
+    _EP_STATE.update(mesh=None, ep=None, tp=None, dp=())
+
+
+def ep_armed(cfg: ModelConfig) -> bool:
+    m = _EP_STATE["mesh"]
+    if m is None or _EP_STATE["ep"] is None:
+        return False
+    n_ep = dict(zip(m.axis_names, m.devices.shape))[_EP_STATE["ep"]]
+    return cfg.n_experts % n_ep == 0
+
+
+def _a2a_shift(x: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+    """All-to-all as N-1 shift rounds of ``ppermute``.
+
+    x: [n, ...] — piece j is addressed to shard j; returns [n, ...] with
+    piece s received from shard s.  This is the shift-scheduled a2a the
+    paper's ``AllToAllCost`` models (round k: shard i -> shard i+k), it
+    lowers to native collective-permutes on every backend (XLA:CPU has no
+    native all-to-all and would decompose into all-gathers, inflating
+    both real traffic and accounting), and its wire bytes are exactly
+    (n-1)/n of the buffer.
+    """
+    me = jax.lax.axis_index(axis)
+    out = jnp.zeros_like(x)
+    out = jax.lax.dynamic_update_index_in_dim(
+        out, jnp.take(x, me, axis=0), me, 0)
+    for k in range(1, n):
+        perm = [(i, (i + k) % n) for i in range(n)]
+        sent = jnp.take(x, (me + k) % n, axis=0)
+        recv = jax.lax.ppermute(sent, axis, perm)
+        out = jax.lax.dynamic_update_index_in_dim(out, recv, (me - k) % n, 0)
+    return out
+
+
+def moe_a2a(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in replacement for ``layers.moe_dense`` under an armed EP mesh."""
+    from repro.models.layers import mlp  # shared-expert fused MLP
+
+    mesh: Mesh = _EP_STATE["mesh"]
+    ep_axis: str = _EP_STATE["ep"]
+    tp_axis = _EP_STATE["tp"]
+    dp = _EP_STATE["dp"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_ep = sizes[ep_axis]
+    E, K = cfg.n_experts, cfg.moe_top_k
+    E_loc = E // n_ep
+    B, S, D = x.shape
+
+    batch_axes = (*dp, ep_axis)
+    b_ok = B % math.prod(sizes[a] for a in batch_axes) == 0
+    s_ok = tp_axis is not None and S % sizes[tp_axis] == 0
+    x_spec = P(batch_axes if b_ok else dp or None,
+               tp_axis if s_ok else None, None)
+
+    w_spec: Dict[str, Any] = {
+        "router": P(None, None),
+        "w1": P(ep_axis, None, tp_axis),
+        "w3": P(ep_axis, None, tp_axis),
+        "w2": P(ep_axis, tp_axis, None),
+    }
+    if "shared" in p:
+        w_spec["shared"] = {
+            "w1": P(None, tp_axis), "w3": P(None, tp_axis),
+            "w2": P(tp_axis, None),
+        }
+
+    def gather_w(w, dim):
+        if tp_axis is None:
+            return w
+        return jax.lax.all_gather(w, tp_axis, axis=dim, tiled=True)
+
+    def body(pp, xl):
+        Bl, Sl, _ = xl.shape
+        T = Bl * Sl
+        xf = xl.reshape(T, D)
+
+        # --- routing (local) --------------------------------------------
+        logits = (xf.astype(jnp.float32) @ pp["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, K)
+        w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean((jax.nn.one_hot(idx, E).sum(1) > 0), axis=0)
+        aux = jax.lax.pmean(E * jnp.sum(me * ce), ep_axis)
+
+        dest = (idx // E_loc).reshape(-1)                     # [T*K]
+        local_e = (idx % E_loc).reshape(-1).astype(jnp.int32)
+        wk = w.reshape(-1).astype(xl.dtype)
+        tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+
+        # --- pack per-destination (argsort + scatter; capacity C) -------
+        C = max(int(math.ceil(T * K / n_ep * cfg.capacity_factor)), K)
+        TK = T * K
+        order = jnp.argsort(dest, stable=True)
+        sorted_dest = dest[order]
+        seg = jnp.searchsorted(sorted_dest, jnp.arange(n_ep))
+        pos = jnp.arange(TK) - seg[sorted_dest]
+        keep = pos < C
+        slot = sorted_dest * C + jnp.where(keep, pos, 0)
+
+        send_x = jnp.zeros((n_ep * C, D), xl.dtype)
+        send_x = send_x.at[slot].add(
+            jnp.where(keep[:, None], xf[tok[order]], 0))
+        send_e = jnp.zeros((n_ep * C,), jnp.int32)
+        send_e = send_e.at[slot].add(jnp.where(keep, local_e[order], 0))
+        slot_of = jnp.full((TK,), -1, jnp.int32)
+        slot_of = slot_of.at[order].set(
+            jnp.where(keep, slot, -1).astype(jnp.int32))
+
+        # --- all-to-all over the EP axis (shift-scheduled ppermutes) -----
+        recv_x = _a2a_shift(
+            send_x.reshape(n_ep, C, D), ep_axis, n_ep).reshape(n_ep * C, D)
+        recv_e = _a2a_shift(
+            send_e.reshape(n_ep, C), ep_axis, n_ep).reshape(n_ep * C)
+
+        # --- local expert FFNs (full weights via TP gather) --------------
+        w1 = gather_w(pp["w1"], 2)
+        w3 = gather_w(pp["w3"], 2)
+        w2 = gather_w(pp["w2"], 1)
+        T2 = n_ep * C
+        C2 = max(int(math.ceil(T2 / E_loc * cfg.capacity_factor)), 1)
+        order2 = jnp.argsort(recv_e, stable=True)
+        sorted_e2 = recv_e[order2]
+        seg2 = jnp.searchsorted(sorted_e2, jnp.arange(E_loc))
+        pos2 = jnp.arange(T2) - seg2[sorted_e2]
+        keep2 = pos2 < C2
+        slot2 = sorted_e2 * C2 + jnp.where(keep2, pos2, 0)
+        xin = jnp.zeros((E_loc * C2, D), xl.dtype)
+        xin = xin.at[slot2].add(jnp.where(keep2[:, None], recv_x[order2], 0))
+        xin = xin.reshape(E_loc, C2, D)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, w1))
+        h = h * jnp.einsum("ecd,edf->ecf", xin, w3)
+        xout = jnp.einsum("ecf,efd->ecd", h, w2).reshape(E_loc * C2, D)
+
+        back = jnp.zeros((T2, D), xl.dtype)
+        back = back.at[order2].add(jnp.where(keep2[:, None], xout[slot2], 0))
+
+        # --- return trip + combine ---------------------------------------
+        ret = _a2a_shift(
+            back.reshape(n_ep, C, D), ep_axis, n_ep).reshape(n_ep * C, D)
+        ok = slot_of >= 0
+        contrib = jnp.where(ok[:, None], ret[jnp.maximum(slot_of, 0)], 0)
+        y = jnp.zeros((T, D), xl.dtype).at[tok].add(contrib * wk[:, None])
+
+        if "shared" in pp:
+            shared_full = {
+                "w1": gather_w(pp["shared"]["w1"], 1),
+                "w3": gather_w(pp["shared"]["w3"], 1),
+                "w2": gather_w(pp["shared"]["w2"], 0),
+            }
+            y = y + mlp(shared_full, xf)
+        return y.reshape(Bl, Sl, D), aux
+
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(w_spec, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    return f(p, x)

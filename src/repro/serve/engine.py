@@ -1,0 +1,131 @@
+"""Batched generation engine: prefill + decode with KV/state caches.
+
+Wave-based continuous batching: requests with equal prompt length join a
+prefill wave; decode then steps the whole wave until every slot finishes
+(EOS or per-request max).  The decode step function is jitted once per
+(batch, s_max) and reused across waves.
+
+On a mesh, caches follow :func:`repro.parallel.sharding.cache_pspecs`
+(batch over DP axes, heads over model); the engine code is identical on
+1 chip and 512 — this is the ``serve_step`` that the decode-shape
+dry-run cells lower.
+
+Multi-length batching via left-pad masks is future work; waves require
+equal prompt lengths (assert below).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GenerationConfig", "GenerationEngine", "make_serve_step"]
+
+
+@dataclasses.dataclass
+class GenerationConfig:
+    max_new_tokens: int = 32
+    eos_token: int = 0
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+def make_serve_step(model) -> Callable:
+    """The single-token decode step used by the dry-run decode cells."""
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return serve_step
+
+
+class GenerationEngine:
+    def __init__(self, model, params, gen_cfg: Optional[GenerationConfig] = None):
+        self.model = model
+        self.params = params
+        self.cfg = gen_cfg or GenerationConfig()
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self.stats: Dict[str, float] = {"prefill_tokens": 0, "decode_steps": 0}
+
+    def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.cfg.temperature).astype(jnp.int32)
+
+    def generate(
+        self,
+        prompts: List[List[int]],
+        frontend_embeds: Optional[jnp.ndarray] = None,
+        max_new_tokens: Optional[int] = None,
+    ) -> List[List[int]]:
+        """One wave: equal-length prompts -> generated continuations."""
+        lens = {len(p) for p in prompts}
+        assert len(lens) == 1, f"wave needs equal prompt lengths, got {lens}"
+        max_new = max_new_tokens or self.cfg.max_new_tokens
+        B = len(prompts)
+        tokens = jnp.asarray(prompts, dtype=jnp.int32)
+        P = tokens.shape[1]
+
+        logits, cache = self._prefill(self.params, tokens, frontend_embeds)
+        self.stats["prefill_tokens"] += B * P
+        # grow the cache to P + max_new slots
+        cache = _grow_cache(cache, P, P + max_new)
+
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        out = np.zeros((B, max_new), dtype=np.int32)
+        finished = np.zeros(B, dtype=bool)
+        cur = self._sample(logits, rng)
+        for t in range(max_new):
+            out[:, t] = np.where(finished, self.cfg.eos_token, np.asarray(cur))
+            finished |= np.asarray(cur) == self.cfg.eos_token
+            if finished.all():
+                break
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, cur, cache)
+            self.stats["decode_steps"] += 1
+            cur = self._sample(logits, sub)
+        return [row[: _trim(row, self.cfg.eos_token)].tolist() for row in out]
+
+
+def _trim(row: np.ndarray, eos: int) -> int:
+    hits = np.nonzero(row == eos)[0]
+    return int(hits[0]) if len(hits) else len(row)
+
+
+#: cache keys that carry a sequence dimension, and where it sits
+#: (negative index).  State caches (wkv, h, conv, *_sx) never grow.
+_SEQ_DIM = {"k": -2, "v": -2, "ckv": -2, "k_rope": -2}
+
+
+def _grow_cache(cache: Any, cur_len: int, new_len: int) -> Any:
+    """Pad the sequence dim of prefill caches to decode headroom.
+
+    Key-aware: only KV/latent buffers grow; recurrent states and the
+    ring-buffer window caches of the hybrid arch pass through untouched.
+    (Whisper cross-attn xk/xv are fixed to the audio context — untouched.)
+    """
+    if new_len <= cur_len:
+        return cache
+
+    def grow(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        if name not in _SEQ_DIM or not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return leaf
+        d = leaf.ndim + _SEQ_DIM[name]
+        if leaf.shape[d] != cur_len:   # ring-buffer (hybrid) or fixed ctx
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[d] = (0, new_len - cur_len)
+        return jnp.pad(leaf, pad)
+
+    return jax.tree_util.tree_map_with_path(grow, cache)

@@ -1,0 +1,9 @@
+from .train_step import (  # noqa: F401
+    TrainState,
+    batch_pspecs,
+    init_state,
+    jit_train_step,
+    make_train_step,
+    state_pspecs,
+)
+from .trainer import ClusterView, NodeFailure, Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+The SP/EP contexts are module-level trace-time state armed by launchers
+(`configure_sp`); reset them around every test so a test that arms them
+(e.g. the launch-spec tests) cannot leak sharding constraints into
+mesh-less tests.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_parallel_contexts():
+    yield
+    from repro.models.layers import clear_sequence_parallel
+    from repro.parallel.moe_a2a import clear_ep
+
+    clear_sequence_parallel()
+    clear_ep()

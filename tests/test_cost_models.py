@@ -1,0 +1,122 @@
+"""Unit + property tests for the paper's cost models (§IV-A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import COST_MODELS, make_cost_model
+from repro.core.cost_models import RingCost
+
+
+def _rand_cost(n, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(1.0, 10.0, (n, n))
+    c = np.maximum(c, c.T)
+    np.fill_diagonal(c, 0.0)
+    return c
+
+
+ALGOS = ["ring", "halving_doubling", "double_binary_tree", "all_to_all"]
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_cost_positive_and_batch_consistent(algo):
+    c = _rand_cost(16)
+    m = make_cost_model(algo, c, 100e6)
+    rng = np.random.default_rng(1)
+    perms = np.stack([rng.permutation(16) for _ in range(8)])
+    batch = m.cost_batch(perms)
+    for i, p in enumerate(perms):
+        assert batch[i] == pytest.approx(m.cost(p))
+        assert batch[i] > 0
+
+
+def test_bcube_requires_power_of_base():
+    c = _rand_cost(16)
+    m = make_cost_model("bcube", c, 1e6, base=4)
+    assert m.cost(np.arange(16)) > 0
+    with pytest.raises(AssertionError):
+        make_cost_model("bcube", _rand_cost(12), 1e6, base=4)
+
+
+def test_ring_cost_is_tour_length():
+    """C_r must equal the sum of successive-pair costs (paper formula)."""
+    c = _rand_cost(10)
+    m = make_cost_model("ring", c, 0.0)
+    perm = np.random.default_rng(2).permutation(10)
+    expect = sum(c[perm[i], perm[i - 1]] for i in range(10))
+    assert m.cost(perm) == pytest.approx(expect)
+
+
+def test_hd_cost_is_sum_of_round_maxima():
+    c = _rand_cost(8)
+    m = make_cost_model("halving_doubling", c, 8e6)
+    perm = np.arange(8)
+    total = 0.0
+    for i in range(3):
+        pairs = {(j, j ^ (1 << i)) for j in range(8)}
+        scale = (8e6 / 2 ** (i + 1)) / 8e6
+        total += max(c[a, b] * scale for a, b in pairs)
+    assert m.cost(perm) == pytest.approx(total)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(ALGOS))
+@settings(max_examples=25, deadline=None)
+def test_permutation_invariance_of_node_relabeling(seed, algo):
+    """Relabeling nodes and permuting identically must not change cost.
+
+    cost(perm, c) == cost(sigma(perm), c relabeled by sigma^-1) — the
+    objective depends only on which physical pairs communicate.
+    """
+    rng = np.random.default_rng(seed)
+    n = 8
+    c = _rand_cost(n, seed)
+    perm = rng.permutation(n)
+    sigma = rng.permutation(n)
+    c2 = c[np.ix_(sigma, sigma)]          # c2[i,j] = c[sigma_i, sigma_j]
+    inv = np.argsort(sigma)
+    m1 = make_cost_model(algo, c, 1e6)
+    m2 = make_cost_model(algo, c2, 1e6)
+    assert m1.cost(perm) == pytest.approx(m2.cost(inv[perm]), rel=1e-9)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_uniform_cost_makes_order_irrelevant(seed):
+    """On a uniform fabric every rank order costs the same (no locality
+    -> nothing to exploit; the paper's premise in reverse)."""
+    rng = np.random.default_rng(seed)
+    n = 16
+    c = np.full((n, n), 3.0)
+    np.fill_diagonal(c, 0.0)
+    for algo in ALGOS:
+        m = make_cost_model(algo, c, 1e6)
+        a = m.cost(np.arange(n))
+        b = m.cost(rng.permutation(n))
+        assert a == pytest.approx(b)
+
+
+def test_critical_edges_identify_max_cost_pair():
+    c = _rand_cost(8)
+    c[2, 5] = c[5, 2] = 1000.0
+    m = make_cost_model("halving_doubling", c, 1e6)
+    # place 2 and 5 as XOR-1 partners so round 0 uses the bad edge
+    perm = np.array([2, 5, 0, 1, 3, 4, 6, 7])
+    edges = m.critical_edges(perm)
+    assert any({a, b} == {2, 5} for a, b, _ in edges)
+
+
+def test_exact_lat_bw_parameterization():
+    n = 8
+    rng = np.random.default_rng(3)
+    lat = _rand_cost(n, 1) * 1e-6
+    bw = np.full((n, n), 1e9)
+    m = make_cost_model("halving_doubling", size_bytes=1e6, lat=lat, bw=bw)
+    # round i payload = S / 2^{i+1}: exact alpha-beta, not linear rescale
+    perm = np.arange(n)
+    total = 0.0
+    for i in range(3):
+        pairs = {(j, j ^ (1 << i)) for j in range(n)}
+        payload = 1e6 / 2 ** (i + 1)
+        total += max(lat[a, b] + payload / 1e9 for a, b in pairs)
+    assert m.cost(perm) == pytest.approx(total)

@@ -1,0 +1,65 @@
+"""Unit tests for the HLO introspection layer (roofline instrumentation)."""
+
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+SAMPLE_HLO = """\
+HloModule jit_step, entry_computation_layout={()->f32[]}
+
+%wide.body_2 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ag = bf16[64,512]{1,0} all-gather(%x), replica_groups=[16,16]<=[256]
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%add
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %z)
+}
+
+%wide.cond_2 (p: (s32[], f32[128,256])) -> pred[] {
+  %c40 = s32[] constant(40)
+  ROOT %lt = pred[] compare(%i, %c40), direction=LT
+}
+
+ENTRY %main.1 (a: f32[4]) -> f32[] {
+  %w = (s32[], f32[128,256]) while(%init), condition=%wide.cond_2, body=%wide.body_2
+  %cp = f32[1024]{0} collective-permute(%a), source_target_pairs={{0,1}}
+  %rs = bf16[32,32]{1,0} reduce-scatter(%b), replica_groups=[4,4]<=[16]
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_parse_collectives_counts_and_scales():
+    st = ha.parse_collectives(SAMPLE_HLO)
+    # all-gather inside the while body scales by trip=40
+    assert st.count_by_type["all-gather"] == 40
+    assert st.bytes_by_type["all-gather"] == pytest.approx(64 * 512 * 2 * 40)
+    assert st.bytes_by_type["all-reduce"] == pytest.approx(128 * 4 * 40)
+    # entry-level ops scale by 1
+    assert st.count_by_type["collective-permute"] == 1
+    assert st.bytes_by_type["collective-permute"] == pytest.approx(1024 * 4)
+    assert st.bytes_by_type["reduce-scatter"] == pytest.approx(32 * 32 * 2)
+
+
+def test_parse_collectives_no_scaling_mode():
+    st = ha.parse_collectives(SAMPLE_HLO, scale_loops=False)
+    assert st.count_by_type["all-gather"] == 1
+    assert st.bytes_by_type["all-gather"] == pytest.approx(64 * 512 * 2)
+
+
+def test_roofline_terms_dominance():
+    hw = ha.HW()
+    # compute-bound: lots of flops, tiny bytes
+    t = ha.roofline_terms(1e20, 1e10, 1e8, 256, hw)
+    assert t["dominant"] == "compute"
+    # collective-bound with DCN share
+    t = ha.roofline_terms(1e12, 1e10, 1e13, 256, hw, dcn_collective_bytes=5e12)
+    assert t["dominant"] == "collective"
+    # DCN bytes cost more than ICI bytes
+    t_ici = ha.roofline_terms(0, 0, 1e12, 256, hw)
+    t_dcn = ha.roofline_terms(0, 0, 1e12, 256, hw, dcn_collective_bytes=1e12)
+    assert t_dcn["collective_s"] > t_ici["collective_s"]
+
+
+def test_result_bytes_tuple_results():
+    line = ("  %aa = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) "
+            "all-to-all(%p0, %p1), replica_groups={}")
+    assert ha._result_bytes(line) == pytest.approx(2 * 8 * 128 * 2)

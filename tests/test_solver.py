@@ -1,0 +1,120 @@
+"""Solver tests: SA, refinement, exactness, and paper §IV-C properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    exhaustive,
+    greedy_ring,
+    held_karp,
+    make_cost_model,
+    or_opt,
+    percentile_orders,
+    solve,
+    solve_sa,
+    solve_worst,
+    swap_hill_climb,
+    two_opt,
+)
+
+
+def _rand_cost(n, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(1.0, 10.0, (n, n))
+    c = np.maximum(c, c.T)
+    np.fill_diagonal(c, 0.0)
+    return c
+
+
+def test_exhaustive_matches_held_karp():
+    c = _rand_cost(7, seed=5)
+    m = make_cost_model("ring", c, 0.0)
+    _, best_exh = exhaustive(m)
+    _, best_hk = held_karp(c)
+    assert best_exh == pytest.approx(best_hk)
+
+
+def test_two_opt_never_worsens():
+    c = _rand_cost(20, seed=1)
+    m = make_cost_model("ring", c, 0.0)
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        p0 = rng.permutation(20)
+        p1 = two_opt(c, p0)
+        assert m.cost(p1) <= m.cost(p0) + 1e-12
+        p2 = or_opt(c, p1)
+        assert m.cost(p2) <= m.cost(p1) + 1e-12
+
+
+def test_sa_improves_over_random_mean():
+    c = _rand_cost(32, seed=3)
+    m = make_cost_model("ring", c, 0.0)
+    rng = np.random.default_rng(4)
+    rand_costs = m.cost_batch(np.stack([rng.permutation(32) for _ in range(64)]))
+    res = solve_sa(m, iters=800, chains=8, seed=0)
+    assert res.cost < rand_costs.mean()
+
+
+def test_full_pipeline_beats_sa_alone_or_ties():
+    c = _rand_cost(24, seed=7)
+    m = make_cost_model("ring", c, 0.0)
+    sa = solve_sa(m, iters=500, chains=8, seed=1)
+    full = solve(m, method="auto", iters=500, chains=8, seed=1)
+    assert full.cost <= sa.cost + 1e-12
+
+
+def test_solve_small_n_exact():
+    c = _rand_cost(6, seed=8)
+    m = make_cost_model("ring", c, 0.0)
+    res = solve(m, method="auto")
+    _, best = exhaustive(m)
+    assert res.cost == pytest.approx(best)
+
+
+def test_worst_exceeds_best():
+    c = _rand_cost(16, seed=9)
+    m = make_cost_model("halving_doubling", c, 1e6)
+    best = solve(m, method="paper", iters=600, seed=0)
+    worst = solve_worst(m, iters=600, seed=0)
+    assert worst.cost > best.cost
+
+
+def test_swap_hill_climb_monotone():
+    c = _rand_cost(12, seed=10)
+    m = make_cost_model("double_binary_tree", c, 1e6)
+    p0 = np.random.default_rng(0).permutation(12)
+    p1 = swap_hill_climb(m, p0)
+    assert m.cost(p1) <= m.cost(p0) + 1e-12
+
+
+def test_percentile_orders_span_cost_range():
+    c = _rand_cost(24, seed=11)
+    m = make_cost_model("ring", c, 0.0)
+    best = solve(m, iters=400, seed=0)
+    worst = solve_worst(m, iters=400, seed=0)
+    orders = percentile_orders(m, best.perm, worst.perm, k=10, seed=0)
+    costs = m.cost_batch(np.stack(orders))
+    assert len(orders) == 10
+    # spans at least half the best->worst range, monotone-ish coverage
+    assert costs.max() - costs.min() > 0.5 * (worst.cost - best.cost)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_solver_output_is_permutation(seed):
+    c = _rand_cost(16, seed % 1000)
+    m = make_cost_model("ring", c, 0.0)
+    res = solve(m, iters=200, chains=4, seed=seed)
+    assert sorted(res.perm.tolist()) == list(range(16))
+
+
+def test_greedy_ring_valid_and_reasonable():
+    c = _rand_cost(30, seed=12)
+    p = greedy_ring(c)
+    assert sorted(p.tolist()) == list(range(30))
+    m = make_cost_model("ring", c, 0.0)
+    rng = np.random.default_rng(13)
+    rand_mean = m.cost_batch(
+        np.stack([rng.permutation(30) for _ in range(32)])).mean()
+    assert m.cost(p) < rand_mean

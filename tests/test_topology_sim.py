@@ -1,0 +1,129 @@
+"""Topology generator, probing, and flow-level simulator tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CollectiveSimulator,
+    Fabric,
+    cost_matrix,
+    make_cost_model,
+    make_datacenter,
+    make_tpu_fleet,
+    probe_fabric,
+    scramble,
+    simulate_collective,
+    solve,
+    solve_worst,
+)
+from repro.core.schedule import SCHEDULES
+
+
+def test_datacenter_latency_hierarchy():
+    """Intra-rack must beat cross-agg latency (paper Fig. 2 structure)."""
+    fab = make_datacenter(32, nodes_per_rack=8, seed=0)
+    intra = fab.lat[0, 1]          # same rack
+    cross = fab.lat[0, 31]         # different agg
+    assert intra < cross
+    assert fab.lat.max() > 10 * fab.lat[fab.lat > 0].min()  # wide spread
+
+
+def test_tpu_fleet_ici_vs_dcn():
+    fleet = make_tpu_fleet(n_pods=2, pod_shape=(4, 4), seed=0)
+    intra = fleet.lat[0, 1]        # 1 ICI hop
+    cross = fleet.lat[0, 16]       # cross-pod DCN
+    assert cross > 10 * intra
+    assert np.isfinite(fleet.bw[fleet.bw < np.inf]).all()
+
+
+def test_scramble_preserves_multiset_of_costs():
+    fab = make_datacenter(16, seed=1)
+    scr, hidden = scramble(fab, seed=2)
+    assert sorted(fab.lat.ravel()) == pytest.approx(sorted(scr.lat.ravel()))
+    # hidden mapping actually recovers the original
+    inv = np.argsort(hidden)
+    np.testing.assert_allclose(scr.lat[np.ix_(inv, inv)], fab.lat)
+
+
+def test_probe_symmetric_and_positive():
+    fab = make_datacenter(16, seed=3)
+    pr = probe_fabric(fab, seed=4)
+    assert (pr.lat == pr.lat.T).all()
+    assert (pr.lat[~np.eye(16, dtype=bool)] > 0).all()
+    c = cost_matrix(pr, 1e6)
+    assert (c == c.T).all()
+
+
+def test_subset_elastic_restart_fabric():
+    fab = make_datacenter(16, seed=5)
+    sub = fab.subset([0, 1, 2, 3, 8, 9, 10, 11])
+    assert sub.n == 8
+    np.testing.assert_allclose(sub.lat[0, 1], fab.lat[0, 1])
+    np.testing.assert_allclose(sub.lat[4, 5], fab.lat[8, 9])
+
+
+@pytest.mark.parametrize("algo", ["ring", "ring_sequential", "halving_doubling",
+                                  "double_binary_tree", "all_to_all"])
+def test_simulator_runs_all_schedules(algo):
+    fab = make_datacenter(16, seed=6)
+    t = simulate_collective(fab, algo, np.arange(16), 1e7)
+    assert t > 0 and np.isfinite(t)
+
+
+def test_simulator_bcube():
+    fab = make_datacenter(16, seed=6)
+    t = simulate_collective(fab, "bcube", np.arange(16), 1e7, base=4)
+    assert t > 0
+
+
+def test_schedules_conserve_flow_counts():
+    """Chunked ring: 2(N-1) rounds x N flows of S/N bytes each."""
+    perm = np.arange(8)
+    rounds = SCHEDULES["ring"](perm, 8e6)
+    assert len(rounds) == 14
+    assert all(len(r) == 8 for r in rounds)
+    assert all(f.size == pytest.approx(1e6) for r in rounds for f in r)
+
+
+def test_contention_slows_shared_links():
+    """Two flows sharing one uplink must take longer than one alone."""
+    fab = make_datacenter(16, nodes_per_rack=8, oversub=8.0, seed=7)
+    from repro.core.schedule import Flow
+    from repro.core.simulator import simulate_rounds
+
+    # cross-rack flows share the ToR uplink
+    one = simulate_rounds(fab, [[Flow(0, 8, 50e6)]])
+    two = simulate_rounds(fab, [[Flow(0, 8, 50e6), Flow(1, 9, 50e6)]])
+    assert two > one * 1.2
+
+
+def test_optimized_order_beats_worst_in_simulator():
+    """End-to-end §V: solver's order must beat the worst order when
+    *simulated* (not just under its own cost model)."""
+    fab, _ = scramble(make_datacenter(32, seed=8), seed=9)
+    c = cost_matrix(probe_fabric(fab, seed=10), 0.0)
+    m = make_cost_model("ring", c, 0.0)
+    best = solve(m, iters=500, chains=8, seed=0)
+    worst = solve_worst(m, iters=500, chains=8, seed=0)
+    sim = CollectiveSimulator(fab, "ring", 50e6)
+    t_best, t_worst = sim.run(best.perm), sim.run(worst.perm)
+    assert t_best < t_worst
+
+
+def test_spearman_cost_model_vs_simulator():
+    """Table I reproduction: strong rank correlation on percentile orders."""
+    from repro.core import percentile_orders
+
+    fab, _ = scramble(make_datacenter(32, seed=11), seed=12)
+    c = cost_matrix(probe_fabric(fab, seed=13), 0.0)
+    m = make_cost_model("ring", c, 0.0)
+    best = solve(m, iters=400, seed=0)
+    worst = solve_worst(m, iters=400, seed=0)
+    orders = percentile_orders(m, best.perm, worst.perm, k=10, seed=0)
+    pred = m.cost_batch(np.stack(orders))
+    sim = CollectiveSimulator(fab, "ring", 50e6)
+    act = sim.run_many(orders)
+    rx = np.argsort(np.argsort(pred))
+    ry = np.argsort(np.argsort(act))
+    rho = np.corrcoef(rx, ry)[0, 1]
+    assert rho > 0.55, rho  # paper Table I: 0.58-0.94
