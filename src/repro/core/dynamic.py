@@ -47,30 +47,30 @@ def bottleneck_swap(
     swaps: List[Tuple[int, int]] = []
     n = len(perm)
     pos_of = np.empty(n, dtype=np.int64)
+    rows = np.arange(n)
 
     for _ in range(max_rounds):
         crit = cost_model.critical_edges(perm)
         if not crit:
             break
         a, b, _ = max(crit, key=lambda t: t[2])
-        pos_of[perm] = np.arange(n)
-        best_cost, best_perm, best_swap = cur, None, None
-        for endpoint in (a, b):
+        pos_of[perm] = rows
+        # candidates for both endpoints in one [2n, n] batch: row
+        # (e * n + k) swaps endpoint e's rank with node k's rank
+        cands = np.tile(perm, (2 * n, 1))
+        other_pos = pos_of[rows]
+        for e, endpoint in enumerate((a, b)):
             pe = pos_of[endpoint]
-            cands = np.tile(perm, (n, 1))
-            rows = np.arange(n)
-            other_pos = pos_of[rows]
-            # swap endpoint's rank with every node's rank
-            cands[rows, pe] = perm[other_pos]
-            cands[rows, other_pos] = endpoint
-            costs = cost_model.cost_batch(cands)
-            k = int(np.argmin(costs))
-            if costs[k] < best_cost - 1e-15:
-                best_cost, best_perm, best_swap = float(costs[k]), cands[k], (endpoint, k)
-        if best_perm is None:
+            blk = cands[e * n : (e + 1) * n]
+            blk[rows, pe] = perm[other_pos]
+            blk[rows, other_pos] = endpoint
+        costs = cost_model.cost_batch(cands)
+        k = int(np.argmin(costs))
+        if costs[k] >= cur - 1e-15:
             break
-        perm, cur = best_perm, best_cost
-        swaps.append(best_swap)
+        e, kk = divmod(k, n)
+        perm, cur = cands[k], float(costs[k])
+        swaps.append(((a, b)[e], kk))
     return perm, cur, swaps
 
 

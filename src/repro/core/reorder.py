@@ -83,7 +83,42 @@ def _group_greedy(c: np.ndarray, units: List[int], k: int) -> List[List[int]]:
     Greedy agglomeration: seed each group with the unassigned unit that is
     farthest from all others (hardest to place), then grow by repeatedly
     adding the unit with the smallest mean cost to the current group.
+
+    Vectorized: instead of re-slicing submatrices per pick (the seed's
+    O(m^2 k) inner loops), two running sum vectors — cost-to-remaining
+    and cost-to-current-group — are updated with one O(m) axpy per pick,
+    so the whole partition is O(m^2) with m numpy ops total.
     """
+    units = list(units)
+    m = len(units)
+    active = np.ones(m, dtype=bool)
+    cu = c if units == list(range(c.shape[0])) else c[np.ix_(units, units)]
+    sum_rem = cu.sum(axis=1)                       # cost to remaining units
+    groups: List[List[int]] = []
+    n_active = m
+    while n_active > k:
+        seed_i = int(np.argmax(np.where(active, sum_rem, -np.inf)))
+        group = [seed_i]
+        active[seed_i] = False
+        sum_rem -= cu[:, seed_i]
+        sum_grp = cu[:, seed_i].copy()             # cost to current group
+        while len(group) < k:
+            pick = int(np.argmin(np.where(active, sum_grp, np.inf)))
+            group.append(pick)
+            active[pick] = False
+            sum_rem -= cu[:, pick]
+            sum_grp += cu[:, pick]
+        groups.append(group)
+        n_active -= k
+    rest = np.nonzero(active)[0]
+    if rest.size:
+        groups.append([int(i) for i in rest])
+    return [[units[i] for i in g] for g in groups]
+
+
+def _group_greedy_reference(c: np.ndarray, units: List[int], k: int) -> List[List[int]]:
+    """Seed greedy agglomeration (per-pick submatrix slicing), kept
+    verbatim for the equivalence property tests and benchmarks."""
     remaining = set(units)
     groups: List[List[int]] = []
     while remaining:
@@ -132,19 +167,64 @@ def default_axis_weights(axis_names: Sequence[str]) -> Dict[str, float]:
     return w
 
 
+def _collapse_cost(cost_matrix: np.ndarray, new_units: List[List[int]]) -> np.ndarray:
+    """Inter-group mean cost matrix after collapsing groups to supernodes.
+
+    All units have equal size on the mesh path, so the seed's O(m^2)
+    Python loop of submatrix ``.mean()`` calls becomes one blocked
+    reduction: gather the permuted matrix, reshape to [m, b, m, b], mean
+    over the block axes.
+    """
+    m = len(new_units)
+    sizes = {len(u) for u in new_units}
+    if len(sizes) == 1:
+        ids = np.asarray(new_units, dtype=np.int64).reshape(-1)
+        b = len(new_units[0])
+        blk = cost_matrix[np.ix_(ids, ids)].reshape(m, b, m, b)
+        nc = blk.mean(axis=(1, 3))
+        np.fill_diagonal(nc, 0.0)
+        return nc
+    return _collapse_cost_reference(cost_matrix, new_units)
+
+
+def _collapse_cost_reference(cost_matrix: np.ndarray,
+                             new_units: List[List[int]]) -> np.ndarray:
+    """Seed supernode collapse: O(m^2) Python loop of submatrix means.
+
+    Kept as the ``engine="reference"`` implementation and as
+    :func:`_collapse_cost`'s unequal-size fallback.
+    """
+    m = len(new_units)
+    nc = np.zeros((m, m))
+    for i in range(m):
+        for j in range(m):
+            if i == j:
+                continue
+            nc[i, j] = cost_matrix[np.ix_(new_units[i], new_units[j])].mean()
+    return nc
+
+
 def optimize_mesh_assignment(
     cost_matrix: np.ndarray,
     mesh_shape: Sequence[int],
     axis_names: Sequence[str],
     axis_weights: Optional[Dict[str, float]] = None,
     seed: int = 0,
+    engine: str = "vectorized",
 ) -> MeshPlan:
-    """Hierarchical N-D rank reordering (see module docstring)."""
+    """Hierarchical N-D rank reordering (see module docstring).
+
+    ``engine="reference"`` runs the seed implementation (per-pick
+    submatrix means in the grouping loop, O(m^2) Python supernode
+    collapse) — kept for equivalence tests and benchmarks.
+    """
     mesh_shape = tuple(mesh_shape)
     axis_names = tuple(axis_names)
     n = int(np.prod(mesh_shape))
     assert cost_matrix.shape == (n, n)
     weights = axis_weights or default_axis_weights(axis_names)
+    group_greedy = (_group_greedy_reference if engine == "reference"
+                    else _group_greedy)
 
     # Process axes hottest-first; by convention that is innermost-first
     # (model), which also matches how group nesting composes.
@@ -158,7 +238,7 @@ def optimize_mesh_assignment(
     for a in order:
         k = mesh_shape[a]
         ids = list(range(len(units)))
-        groups = _group_greedy(unit_cost, ids, k)
+        groups = group_greedy(unit_cost, ids, k)
         groups = [_order_ring(unit_cost, g) for g in groups]
         axis_members[a] = groups
         # Collapse: each ordered group becomes one unit.
@@ -168,13 +248,10 @@ def optimize_mesh_assignment(
             for u in g:
                 merged.extend(units[u])
             new_units.append(merged)
-        m = len(new_units)
-        nc = np.zeros((m, m))
-        for i in range(m):
-            for j in range(m):
-                if i == j:
-                    continue
-                nc[i, j] = cost_matrix[np.ix_(new_units[i], new_units[j])].mean()
+        if engine == "reference":
+            nc = _collapse_cost_reference(cost_matrix, new_units)
+        else:
+            nc = _collapse_cost(cost_matrix, new_units)
         units, unit_cost = new_units, nc
 
     # Reassemble the assignment: the nesting order of merges is `order`
@@ -208,17 +285,39 @@ def optimize_mesh_assignment(
 def mesh_axis_cost(
     assignment: np.ndarray, cost_matrix: np.ndarray, axis: int, algo: str = "ring"
 ) -> float:
-    """Mean ring cost over all groups along ``axis`` of the assignment."""
+    """Mean collective cost over all groups along ``axis`` of the assignment.
+
+    All groups share one schedule structure (they have the same size), so
+    every group is evaluated in a single batched gather over the full
+    cost matrix — the structure comes from one template model, the node
+    ids from the assignment rows.  Models without a flat round structure
+    (the path-mode tree) fall back to the per-group loop.
+    """
     arr = np.moveaxis(assignment, axis, -1)
     groups = arr.reshape(-1, arr.shape[-1])
+    g = groups.shape[1]
+    if g < 2:
+        return 0.0
+    if algo == "ring":
+        total = cost_matrix[groups, np.roll(groups, 1, axis=1)].sum()
+        return float(total / len(groups))
+    template = make_cost_model(algo, np.zeros((g, g)), 0.0)
+    if template.rounds:
+        total = np.zeros(len(groups))
+        for rnd in template.rounds:
+            a = groups[:, rnd.pairs[:, 0]]
+            b = groups[:, rnd.pairs[:, 1]]
+            edge = cost_matrix[a, b]
+            if template.aggregator == "sum_of_max":
+                total += edge.max(axis=1)
+            else:
+                total += edge.sum(axis=1)
+        return float(total.sum() / len(groups))
     total = 0.0
-    for g in groups:
-        if len(g) < 2:
-            continue
-        # Group ring: cost of the *ordered* member list on its submatrix.
-        sub = cost_matrix[np.ix_(g, g)]
+    for grp in groups:
+        sub = cost_matrix[np.ix_(grp, grp)]
         sub_model = make_cost_model(algo, sub, 0.0)
-        total += sub_model.cost(np.arange(len(g)))
+        total += sub_model.cost(np.arange(len(grp)))
     return total / max(len(groups), 1)
 
 

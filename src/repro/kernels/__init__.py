@@ -7,3 +7,4 @@ from .ops import (  # noqa: F401
     wkv_chunked_op,
     wkv_op,
 )
+from .solver_eval import make_ring_evaluator, ring_cost_batch  # noqa: F401

@@ -1,0 +1,76 @@
+"""Jitted batched solver evaluators (optional ``backend="jax"`` path).
+
+The numpy SA engine in ``repro.core.solver`` evaluates a [P, N] batch of
+ring permutations with one gather; at very large chain counts (hundreds
+of chains, N >= 1024) XLA fuses the gather + reduction and keeps the cost
+matrix resident on the accelerator, so a ``jax.jit`` evaluator wins.
+``solve_sa(..., backend="jax")`` routes its full evaluations here; the
+O(K) delta path stays in numpy (the arrays are tiny and dispatch would
+dominate).
+
+The module is import-gated: constructing an evaluator raises only if jax
+is genuinely unavailable, so the numpy default never pays the import.
+
+Precision note: jax defaults to float32 (x64 is not enabled anywhere in
+this repo), so costs computed here carry ~1e-7 relative rounding vs the
+float64 numpy path.  That can flip Metropolis decisions on near-tied
+orderings mid-run; it never affects the *reported* solver cost, which
+``solve_sa`` recomputes exactly in float64 at the end.  Use the default
+numpy backend when bit-stable trajectories matter.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["make_ring_evaluator", "ring_cost_batch"]
+
+_JIT_CACHE: dict = {}
+
+
+def _get_jitted():
+    fn = _JIT_CACHE.get("ring")
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def _ring_cost(c, perms):
+            # cost = sum_i c[perm[i], perm[i-1]] — one gather per batch
+            return jnp.sum(c[perms, jnp.roll(perms, 1, axis=1)], axis=1)
+
+        fn = _JIT_CACHE["ring"] = _ring_cost
+    return fn
+
+
+def ring_cost_batch(cmat: np.ndarray, perms: np.ndarray) -> np.ndarray:
+    """Ring tour costs for a [P, N] permutation batch via jax.jit."""
+    import jax.numpy as jnp
+
+    perms = np.asarray(perms)
+    if perms.ndim == 1:
+        perms = perms[None, :]
+    out = _get_jitted()(jnp.asarray(cmat), jnp.asarray(perms))
+    return np.asarray(out, dtype=np.float64)
+
+
+def make_ring_evaluator(cmat: np.ndarray) -> Callable[[np.ndarray], np.ndarray]:
+    """Bind ``cmat`` once; returns ``perms -> [P] costs``.
+
+    The matrix is transferred to the default device a single time so the
+    per-iteration call ships only the small permutation batch.
+    """
+    import jax.numpy as jnp
+
+    dev_c = jnp.asarray(cmat)
+    fn = _get_jitted()
+
+    def evaluate(perms: np.ndarray) -> np.ndarray:
+        perms = np.asarray(perms)
+        if perms.ndim == 1:
+            perms = perms[None, :]
+        return np.asarray(fn(dev_c, jnp.asarray(perms)), dtype=np.float64)
+
+    return evaluate

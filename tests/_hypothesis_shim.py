@@ -1,0 +1,105 @@
+"""Minimal fallback for ``hypothesis`` so test collection never hard-fails.
+
+The real library is preferred (see requirements-dev.txt); when it is not
+installed, this shim provides just enough of the ``given``/``settings``/
+``strategies`` surface for our property tests: each ``@given`` test runs
+a fixed number of pseudo-random examples drawn from the declared
+strategies with a deterministic seed, so the tests stay meaningful and
+reproducible — they simply lose hypothesis's shrinking and example
+database.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:          # pragma: no cover - exercised without dev deps
+        from _hypothesis_shim import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    """A draw()-able value source; mirrors the tiny subset we use."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def given(*strats: _Strategy):
+    """Run the test once per generated example (deterministic seed)."""
+
+    def decorator(fn):
+        # NOTE: deliberately not functools.wraps — pytest must see a
+        # zero-argument signature (the strategy parameters are filled by
+        # the shim, not by fixtures).
+        def wrapper():
+            # @settings may sit above or below @given; check both targets
+            max_examples = getattr(
+                wrapper, "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES))
+            rng = np.random.default_rng(0xC0FFEE)
+            for _ in range(max_examples):
+                values = [s.draw(rng) for s in strats]
+                fn(*values)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # mimic hypothesis's marker: plugins (e.g. anyio) introspect
+        # `fn.hypothesis.inner_test`
+        marker = type("HypothesisShimMarker", (), {})()
+        marker.inner_test = fn
+        wrapper.hypothesis = marker
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Record max_examples for ``given``; other options are no-ops."""
+
+    def decorator(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return decorator

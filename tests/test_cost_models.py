@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback when dev deps absent
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import COST_MODELS, make_cost_model
 from repro.core.cost_models import RingCost

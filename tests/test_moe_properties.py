@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback when dev deps absent
+    from _hypothesis_shim import given, settings, st
 
 from repro.configs import get_config
 from repro.models import layers as L

@@ -13,7 +13,10 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback when dev deps absent
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import (
     CollectiveSimulator,
