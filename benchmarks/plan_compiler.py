@@ -1,0 +1,201 @@
+"""Plan-compiler benchmark: compile time, cache-hit latency, plan quality.
+
+On two synthetic fabrics (a scrambled multi-tenant datacenter and a
+scrambled two-pod TPU fleet) this benchmark measures, for a
+training-shaped collective mix:
+
+* **cold compile** — wall seconds for ``PlanningService.request`` with an
+  empty cache (fingerprint + per-entry joint (algo, chunks, perm) search
+  against the contention-aware simulator + N-D mesh plan);
+* **warm hit** — the same request served from the fingerprint-keyed
+  cache after a fresh (differently-seeded) probe of the same fabric; the
+  acceptance bar is >= 100x faster than the cold compile;
+* **plan quality** — the plan's simulated completion time for one pass
+  over the mix vs the best *single fixed* backend policy (one algorithm
+  family at identity order for every op — the strongest thing a
+  topology-blind backend can do), summed over the job's message-size
+  histogram.
+
+Emits the harness CSV rows and writes ``BENCH_plan_compiler.json`` at
+the repo root so the trajectory is tracked across PRs.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/plan_compiler.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_repo_root, "src"))
+
+from repro.core import make_datacenter, make_tpu_fleet, probe_fabric, scramble
+from repro.plan import (
+    CollectiveRequest,
+    JobMix,
+    PlanCache,
+    PlanCompiler,
+    PlanningService,
+    SolveBudget,
+)
+
+#: One backend family at identity order per op — what a topology-blind
+#: runtime pins globally.  all-to-all has a single schedule, so every
+#: policy shares it; the comparison isolates algorithm + order choice.
+FIXED_POLICIES = {
+    "ring": {"all-reduce": "ring", "all-gather": "ring_all_gather",
+             "reduce-scatter": "ring_all_gather", "all-to-all": "all_to_all"},
+    "ring_sequential": {"all-reduce": "ring_sequential",
+                        "all-gather": "ring_all_gather",
+                        "reduce-scatter": "ring_all_gather",
+                        "all-to-all": "all_to_all"},
+    "tree": {"all-reduce": "double_binary_tree",
+             "all-gather": "ring_all_gather",
+             "reduce-scatter": "ring_all_gather", "all-to-all": "all_to_all"},
+    "halving_doubling": {"all-reduce": "halving_doubling",
+                         "all-gather": "recursive_doubling",
+                         "reduce-scatter": "recursive_doubling",
+                         "all-to-all": "all_to_all"},
+    "bcube": {"all-reduce": "bcube", "all-gather": "recursive_doubling",
+              "reduce-scatter": "recursive_doubling",
+              "all-to-all": "all_to_all"},
+}
+
+
+def train_mix() -> JobMix:
+    """A training step's histogram: big gradient all-reduce, per-layer
+    TP all-gather/reduce-scatter pair, EP all-to-alls, small control ops."""
+    return JobMix((
+        CollectiveRequest("all-reduce", 64e6),
+        CollectiveRequest("all-reduce", 256e3, count=4.0),
+        CollectiveRequest("all-gather", 8e6, count=2.0),
+        CollectiveRequest("reduce-scatter", 8e6, count=2.0),
+        CollectiveRequest("all-to-all", 4e6, count=4.0),
+    ), name="train")
+
+
+def make_fabrics(smoke: bool):
+    n_dc = 16 if smoke else 32
+    pods = 1 if smoke else 2
+    dc, _ = scramble(make_datacenter(n_dc, seed=0), seed=1)
+    tpu, _ = scramble(make_tpu_fleet(n_pods=pods, pod_shape=(4, 4), seed=0),
+                      seed=1)
+    return {"datacenter": dc, "tpu_fleet": tpu}
+
+
+def fixed_baselines(plan, mix: JobMix):
+    """Total identity-order seconds per fixed policy over the mix."""
+    totals = {}
+    for policy, op_algo in FIXED_POLICIES.items():
+        total, ok = 0.0, True
+        for r in mix.requests:
+            entry = plan.lookup(r.op, r.size_bytes, r.group)
+            algo = op_algo[r.op]
+            if entry is None or algo not in entry.identity_times:
+                ok = False  # infeasible at this n (e.g. non-pow2 HD)
+                break
+            total += r.count * entry.identity_times[algo]
+        if ok:
+            totals[policy] = total
+    return totals
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_plan_compiler.json",
+        seed: int = 0):
+    mix = train_mix()
+    budget = SolveBudget(iters=200 if smoke else 600, chains=8)
+    rows = []
+    results = {
+        "benchmark": "plan_compiler",
+        "smoke": smoke,
+        "mix": [[r.op, r.size_bytes, r.count] for r in mix.requests],
+        "budget": {"iters": budget.iters, "chains": budget.chains},
+        "fabrics": {},
+    }
+
+    for name, fab in make_fabrics(smoke).items():
+        service = PlanningService(PlanCompiler(fabric=fab, budget=budget,
+                                               seed=seed), PlanCache())
+        probe = probe_fabric(fab, seed=seed)
+        t0 = time.perf_counter()
+        plan = service.request(probe, mix)
+        cold_s = time.perf_counter() - t0
+
+        # warm path: fresh probes of the same fabric must hit the cache
+        warm_s = float("inf")
+        for s in range(1, 6):
+            reprobe = probe_fabric(fab, seed=seed + s)
+            t0 = time.perf_counter()
+            warm_plan = service.request(reprobe, mix)
+            warm_s = min(warm_s, time.perf_counter() - t0)
+            assert warm_plan is plan, "warm request missed the plan cache"
+        assert service.stats["compiles"] == 1, service.stats
+        service.close()
+
+        plan_total = plan.total_time(mix)
+        baselines = fixed_baselines(plan, mix)
+        best_policy = min(baselines, key=baselines.get)
+        best_fixed = baselines[best_policy]
+        entry_rows = [
+            {"op": e.op, "bucket": e.bucket, "algo": e.algo,
+             "chunks": e.chunks,
+             "expected_time_s": float(e.expected_time),
+             "best_identity_time_s": float(e.best_identity_time)}
+            for e in plan.entries.values()
+        ]
+        results["fabrics"][name] = {
+            "n": fab.n,
+            "fingerprint": plan.fingerprint.digest,
+            "cold_compile_s": round(float(cold_s), 4),
+            "warm_hit_s": round(float(warm_s), 6),
+            "cache_hit_speedup": round(float(cold_s) / max(warm_s, 1e-9), 1),
+            "cache_hit_geq_100x": bool(cold_s / max(warm_s, 1e-9) >= 100.0),
+            "plan_total_s": float(plan_total),
+            "fixed_policy_totals_s": {k: float(v) for k, v in baselines.items()},
+            "best_fixed_policy": best_policy,
+            "best_fixed_total_s": float(best_fixed),
+            "speedup_vs_best_fixed": round(float(best_fixed) /
+                                           max(float(plan_total), 1e-30), 3),
+            "beats_best_fixed": bool(plan_total < best_fixed),
+            "entries": entry_rows,
+        }
+        rows.append({
+            "name": f"plan_compiler_cold_{name}", "us": cold_s * 1e6,
+            "derived": f"n={fab.n};entries={len(plan.entries)}"})
+        rows.append({
+            "name": f"plan_compiler_warm_{name}", "us": warm_s * 1e6,
+            "derived": f"hit_speedup={cold_s / max(warm_s, 1e-9):.0f}x"})
+        rows.append({
+            "name": f"plan_compiler_quality_{name}",
+            "us": plan_total * 1e6,
+            "derived": f"best_fixed={best_policy}:"
+                       f"{best_fixed * 1e6:.1f}us;"
+                       f"speedup={best_fixed / max(plan_total, 1e-30):.2f}x"})
+
+    for r in rows:
+        print(f"{r['name']},{r['us']:.3f},{r['derived']}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", file=sys.stderr)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small fabrics, reduced solver budget")
+    ap.add_argument("--out", default="BENCH_plan_compiler.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ def main() -> None:
         fig1_distribution,
         fig2_heatmap,
         fig4_speedups,
+        plan_compiler,
         roofline,
         solver_quality,
         table1_spearman,
@@ -23,7 +24,8 @@ def main() -> None:
 
     failures = 0
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
-                fig4_speedups, e2e_training, solver_quality, roofline):
+                fig4_speedups, e2e_training, solver_quality, roofline,
+                plan_compiler):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

@@ -36,6 +36,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .schedule import _require_power_of_base, _require_power_of_two
+
 __all__ = [
     "CostModel",
     "RingCost",
@@ -279,7 +281,7 @@ class HalvingDoublingCost(CostModel):
 
     def _make_rounds(self) -> List[_Round]:
         n = self.n
-        assert n & (n - 1) == 0, "halving-doubling requires power-of-two N"
+        _require_power_of_two(n, "halving_doubling")
         rounds = []
         for i in range(int(np.log2(n))):
             j = np.arange(n)
@@ -471,11 +473,7 @@ class BCubeCost(CostModel):
 
     def _make_rounds(self) -> List[_Round]:
         n, b = self.n, self.base
-        n_rounds, m = 0, 1
-        while m < n:
-            m *= b
-            n_rounds += 1
-        assert m == n, f"bcube requires N a power of base ({n} vs base {b})"
+        n_rounds = _require_power_of_base(n, b, "bcube")
         rounds = []
         for i in range(n_rounds):
             stride = b ** i

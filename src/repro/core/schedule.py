@@ -28,6 +28,8 @@ __all__ = [
     "halving_doubling_allreduce",
     "double_binary_tree_allreduce",
     "bcube_allreduce",
+    "ring_all_gather",
+    "recursive_doubling_all_gather",
     "all_to_all",
     "SCHEDULES",
 ]
@@ -42,6 +44,31 @@ class Flow:
 
 def _p(perm: Sequence[int], rank: int) -> int:
     return int(perm[rank % len(perm)])
+
+
+def _require_power_of_two(n: int, algo: str) -> None:
+    if n < 1 or n & (n - 1) != 0:
+        raise ValueError(
+            f"{algo} requires a power-of-two world size, got n={n}; "
+            "fall back to 'ring' (valid for any n) or pad/split the group"
+        )
+
+
+def _require_power_of_base(n: int, base: int, algo: str) -> int:
+    """Validate n == base**k (k >= 0) and return the number of rounds k."""
+    if base < 2:
+        raise ValueError(f"{algo} requires base >= 2, got base={base}")
+    n_rounds, m = 0, 1
+    while m < n:
+        m *= base
+        n_rounds += 1
+    if m != n:
+        raise ValueError(
+            f"{algo} requires world size a power of its base "
+            f"({n} is not a power of {base}); fall back to 'ring' "
+            "(valid for any n) or choose a base b with n == b**k"
+        )
+    return n_rounds
 
 
 def ring_allreduce_chunked(perm: Sequence[int], size: float) -> List[List[Flow]]:
@@ -73,9 +100,14 @@ def ring_allreduce_sequential(perm: Sequence[int], size: float) -> List[List[Flo
 
 
 def halving_doubling_allreduce(perm: Sequence[int], size: float) -> List[List[Flow]]:
-    """Recursive vector-halving distance-doubling RS + mirrored AG."""
+    """Recursive vector-halving distance-doubling RS + mirrored AG.
+
+    Raises :class:`ValueError` for non-power-of-two ``n`` (the recursive
+    pairing has no partner for stray ranks); callers that cannot pad or
+    split the group should fall back to ``ring``.
+    """
     n = len(perm)
-    assert n & (n - 1) == 0
+    _require_power_of_two(n, "halving_doubling")
     log_n = int(np.log2(n))
     rounds = []
     # reduce-scatter: payload halves each round
@@ -151,12 +183,13 @@ def double_binary_tree_allreduce(perm: Sequence[int], size: float) -> List[List[
 
 
 def bcube_allreduce(perm: Sequence[int], size: float, base: int = 4) -> List[List[Flow]]:
+    """BCube allreduce over ``k`` digit-rounds; requires ``n == base**k``.
+
+    Raises :class:`ValueError` otherwise (every rank needs exactly
+    ``base - 1`` peers per digit); fall back to ``ring`` for arbitrary n.
+    """
     n = len(perm)
-    n_rounds, m = 0, 1
-    while m < n:
-        m *= base
-        n_rounds += 1
-    assert m == n
+    n_rounds = _require_power_of_base(n, base, "bcube")
     rounds = []
     for i in range(n_rounds):
         stride = base ** i
@@ -166,6 +199,40 @@ def bcube_allreduce(perm: Sequence[int], size: float, base: int = 4) -> List[Lis
             for k in range(1, base):
                 partner = j + (((digit + k) % base) - digit) * stride
                 flows.append(Flow(_p(perm, j), _p(perm, partner), size / (base ** (i + 1))))
+        rounds.append(flows)
+    return rounds
+
+
+def ring_all_gather(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """One-lap chunked ring: N-1 rounds, each node forwards one S/N chunk.
+
+    Models a standalone all-gather; a reduce-scatter is the same flow
+    structure run in reverse, so the plan compiler prices both with this
+    builder (the simulator is direction-agnostic at the flow level).
+    """
+    n = len(perm)
+    chunk = size / n
+    rounds = []
+    for _ in range(n - 1):
+        rounds.append([Flow(_p(perm, r), _p(perm, r + 1), chunk) for r in range(n)])
+    return rounds
+
+
+def recursive_doubling_all_gather(perm: Sequence[int], size: float) -> List[List[Flow]]:
+    """Recursive-doubling all-gather: log2(N) rounds of doubling payloads.
+
+    Round ``i`` pairs rank j with j XOR 2^i and exchanges the S/N * 2^i
+    bytes accumulated so far.  Power-of-two N only (raises ValueError);
+    reduce-scatter is the mirrored halving pass with identical flows.
+    """
+    n = len(perm)
+    _require_power_of_two(n, "recursive_doubling")
+    rounds = []
+    for i in range(int(np.log2(n))):
+        flows = []
+        for j in range(n):
+            partner = j ^ (1 << i)
+            flows.append(Flow(_p(perm, j), _p(perm, partner), size / n * (2 ** i)))
         rounds.append(flows)
     return rounds
 
@@ -185,5 +252,7 @@ SCHEDULES = {
     "halving_doubling": halving_doubling_allreduce,
     "double_binary_tree": double_binary_tree_allreduce,
     "bcube": bcube_allreduce,
+    "ring_all_gather": ring_all_gather,
+    "recursive_doubling": recursive_doubling_all_gather,
     "all_to_all": all_to_all,
 }

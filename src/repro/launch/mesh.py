@@ -48,6 +48,20 @@ def make_reordered_mesh(plan, devices: Optional[Sequence] = None):
     return Mesh(arr, plan.axis_names)
 
 
+def make_planned_mesh(plan, devices: Optional[Sequence] = None):
+    """Mesh from a compiled :class:`repro.plan.Plan` (its N-D mesh plan).
+
+    The plan side is the `repro.plan` subsystem's integration point: the
+    planning service compiles (and caches, keyed by fabric fingerprint)
+    the mesh assignment together with the per-collective entries, and
+    this helper applies the assignment exactly like
+    :func:`make_reordered_mesh` applies a bare :class:`MeshPlan`.
+    """
+    assert plan.mesh_plan is not None, \
+        "plan was compiled without mesh_shape; request one from the service"
+    return make_reordered_mesh(plan.mesh_plan, devices=devices)
+
+
 def make_mesh_for_tests(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Small mesh over however many devices the test process has."""
     import jax

@@ -13,8 +13,26 @@ import jax
 import jax.numpy as jnp
 
 
+def serve_job_mix(payload_bytes: float, moe: bool = False):
+    """The decode path's collective histogram: per-layer TP all-gather /
+    reduce-scatter dominate; a small all-reduce syncs sampling state; MoE
+    archs add the EP all-to-all.  (No gradient all-reduce — that is the
+    training mix.)"""
+    from repro.plan import CollectiveRequest, JobMix
+
+    reqs = [
+        CollectiveRequest("all-gather", payload_bytes, count=2.0),
+        CollectiveRequest("reduce-scatter", payload_bytes, count=2.0),
+        CollectiveRequest("all-reduce", max(payload_bytes / 64, 1.0)),
+    ]
+    if moe:
+        reqs.append(CollectiveRequest("all-to-all", payload_bytes, count=2.0))
+    return JobMix(requests=tuple(reqs), name="serve")
+
+
 def main() -> None:
     from repro.configs import get_config
+    from repro.launch.specs import configure_sp
     from repro.launch.train import build_mesh
     from repro.models import get_model
     from repro.serve import GenerationConfig, GenerationEngine
@@ -35,7 +53,10 @@ def main() -> None:
     if args.smoke:
         cfg = cfg.smoke()
     model = get_model(cfg)
-    mesh, _ = build_mesh(args, len(jax.devices()))
+    mesh, plan = build_mesh(
+        args, len(jax.devices()),
+        mix=serve_job_mix(args.payload_bytes, moe=bool(cfg.n_experts)))
+    configure_sp(cfg, mesh, plan=plan)   # SP/EP contexts + planned a2a ring
 
     params = model.init(jax.random.PRNGKey(0))
     fe = None
@@ -51,7 +72,11 @@ def main() -> None:
     with jax.set_mesh(mesh):
         eng = GenerationEngine(
             model, params,
-            GenerationConfig(max_new_tokens=args.max_new, eos_token=-1))
+            GenerationConfig(max_new_tokens=args.max_new, eos_token=-1),
+            plan=plan)
+        if plan is not None:
+            print(f"[serve] plan {plan.fingerprint.digest} hints: "
+                  f"{eng.collective_hints(args.payload_bytes)}")
         t0 = time.perf_counter()
         outs = eng.generate(prompts, frontend_embeds=fe)
         dt = time.perf_counter() - t0

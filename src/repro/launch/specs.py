@@ -31,8 +31,13 @@ def _with_sharding(shapes: Any, pspecs: Any, mesh: Mesh) -> Any:
     )
 
 
-def configure_sp(cfg: ModelConfig, mesh: Mesh) -> None:
-    """Arm sequence-parallel + expert-parallel contexts (trace-time)."""
+def configure_sp(cfg: ModelConfig, mesh: Mesh, plan=None) -> None:
+    """Arm sequence-parallel + expert-parallel contexts (trace-time).
+
+    ``plan`` (a compiled :class:`repro.plan.Plan`, e.g. the one
+    ``launch.train.build_mesh`` returns) is forwarded to ``arm_ep`` so
+    the EP all-to-all follows the plan's solved shift-ring order.
+    """
     from repro.models import layers as L
     from repro.parallel.moe_a2a import arm_ep, clear_ep
 
@@ -43,7 +48,8 @@ def configure_sp(cfg: ModelConfig, mesh: Mesh) -> None:
         L.clear_sequence_parallel()
     if cfg.n_experts and sizes.get("data", 1) > 1:
         arm_ep(mesh, "data",
-               "model" if sizes.get("model", 1) > 1 else None)
+               "model" if sizes.get("model", 1) > 1 else None,
+               plan=plan)
     else:
         clear_ep()
 

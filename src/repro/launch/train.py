@@ -26,37 +26,75 @@ def parse_mesh(s: str):
     return dims, axes
 
 
-def build_mesh(args, n_devices: int):
-    """Mesh per --reorder policy: none | simulate | probe."""
-    import jax
+def default_job_mix(payload_bytes: float, moe: bool = False):
+    """The collective histogram of a training step at ``payload_bytes``
+    gradients: the per-step DP reduction plus the per-layer TP pair, and
+    the EP all-to-all when the arch routes experts."""
+    from repro.plan import CollectiveRequest, JobMix
 
+    reqs = [
+        CollectiveRequest("all-reduce", payload_bytes),           # gradients
+        CollectiveRequest("all-gather", payload_bytes / 8, count=2.0),
+        CollectiveRequest("reduce-scatter", payload_bytes / 8, count=2.0),
+    ]
+    if moe:
+        reqs.append(CollectiveRequest("all-to-all", payload_bytes / 16,
+                                      count=2.0))
+    return JobMix(requests=tuple(reqs), name="train")
+
+
+def build_mesh(args, n_devices: int, mix=None, moe: bool = False):
+    """Mesh per --reorder policy: none | simulate | probe.
+
+    ``simulate``/``probe`` go through the :mod:`repro.plan` service: the
+    plan (per-collective algorithm + rank order + the N-D mesh
+    assignment) is compiled once and cached under the fabric
+    fingerprint, so relaunches — and other jobs on the same fabric —
+    skip the solve entirely.  ``mix`` overrides the planned collective
+    histogram (serving passes its decode-shaped mix); the default is
+    :func:`default_job_mix` with ``moe`` adding the EP all-to-all.
+
+    Returns ``(mesh, plan)`` where plan is a :class:`repro.plan.Plan`
+    (or None when reordering is off).
+    """
     from repro.core import (
-        cost_matrix,
         make_tpu_fleet,
-        optimize_mesh_assignment,
         probe_fabric,
         probe_mesh_pairwise,
         scramble,
     )
-    from repro.launch.mesh import make_mesh_for_tests, make_reordered_mesh
+    from repro.launch.mesh import make_mesh_for_tests, make_planned_mesh
+    from repro.plan import PlanCache, PlanCompiler, PlanningService
 
     shape, axes = parse_mesh(args.mesh)
     if args.reorder == "none" or int(np.prod(shape)) != n_devices:
         return make_mesh_for_tests(shape, axes), None
+    fleet = None
     if args.reorder == "probe":
         probed = probe_mesh_pairwise()             # live-device probes
-        c = cost_matrix(probed, args.payload_bytes)
     else:                                           # simulate
         pods = shape[0] if len(shape) == 3 else 1
         fleet, _ = scramble(
             make_tpu_fleet(n_pods=max(pods, 1),
                            pod_shape=(shape[-2], shape[-1])), seed=0)
-        c = cost_matrix(probe_fabric(fleet), args.payload_bytes)
-    plan = optimize_mesh_assignment(c, shape, axes)
-    print(f"[launch] mesh plan: identity {plan.baseline_cost:.5f} -> "
-          f"optimized {plan.cost:.5f} "
-          f"({plan.baseline_cost / max(plan.cost, 1e-30):.2f}x)")
-    return make_reordered_mesh(plan), plan
+        probed = probe_fabric(fleet)
+    service = PlanningService(
+        PlanCompiler(fabric=fleet),
+        PlanCache(store_dir=getattr(args, "plan_cache_dir", None)))
+    try:
+        plan = service.request(
+            probed, mix or default_job_mix(args.payload_bytes, moe=moe),
+            mesh_shape=shape, axis_names=axes)
+    finally:
+        service.close()
+    mp = plan.mesh_plan
+    hit = "cache hit" if service.stats["cache_hits"] else \
+        f"compiled in {plan.compile_seconds:.2f}s"
+    print(f"[launch] plan {plan.fingerprint.digest} ({hit}): "
+          f"mesh identity {mp.baseline_cost:.5f} -> optimized {mp.cost:.5f} "
+          f"({mp.baseline_cost / max(mp.cost, 1e-30):.2f}x), "
+          f"{len(plan.entries)} collective entries")
+    return make_planned_mesh(plan), plan
 
 
 def main() -> None:
@@ -77,6 +115,8 @@ def main() -> None:
     ap.add_argument("--reorder", choices=["none", "simulate", "probe"],
                     default="simulate")
     ap.add_argument("--payload-bytes", type=float, default=4e6)
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="persist compiled collective plans across launches")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="reduced config (CPU); drop on a real fleet")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
@@ -87,7 +127,10 @@ def main() -> None:
     if args.smoke:
         cfg = dataclasses.replace(cfg.smoke(), vocab_size=2048)
     model = get_model(cfg)
-    mesh, plan = build_mesh(args, len(jax.devices()))
+    mesh, plan = build_mesh(args, len(jax.devices()),
+                            moe=bool(cfg.n_experts))
+    from repro.launch.specs import configure_sp
+    configure_sp(cfg, mesh, plan=plan)   # SP/EP contexts + planned a2a ring
 
     state = init_state(model, jax.random.PRNGKey(0))
     opt = AdamWConfig(schedule=cosine_schedule(args.lr, 10, args.steps))

@@ -42,21 +42,56 @@ from repro.configs.base import ModelConfig
 
 __all__ = ["arm_ep", "clear_ep", "ep_armed", "moe_a2a"]
 
-_EP_STATE: Dict[str, Any] = {"mesh": None, "ep": None, "tp": None, "dp": ()}
+_EP_STATE: Dict[str, Any] = {"mesh": None, "ep": None, "tp": None, "dp": (),
+                             "a2a_order": None}
 
 
-def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model"):
+def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model",
+           plan=None):
+    """Arm expert parallelism; ``plan`` (a :class:`repro.plan.Plan`) may
+    supply the shift-ring order for the EP all-to-all.
+
+    When the plan carries an ``all-to-all`` entry whose group size
+    equals the EP degree, its solved rank order becomes the order in
+    which the shift schedule walks peers (see :func:`_shift_perms`) —
+    the runtime consumption of the compiler's ``AllToAllCost`` solve.
+    """
     dp = tuple(a for a in ("pod",) if a in mesh.axis_names)
+    ep = ep_axis if ep_axis in mesh.axis_names else None
+    order = None
+    if plan is not None and ep is not None:
+        n_ep = dict(zip(mesh.axis_names, mesh.devices.shape))[ep]
+        # among matching a2a entries take the largest payload bucket: the
+        # multi-MB EP shuffle is the one worth ordering for (a tiny
+        # latency-bound bucket may carry a very different solved ring)
+        cands = [e for (op, _b, grp), e in plan.entries.items()
+                 if op == "all-to-all" and len(grp) == n_ep]
+        entry = max(cands, key=lambda e: e.size_bytes) if cands else None
+        if entry is not None:
+            # The shift ring pairs EP *axis indices*; the entry's perm is
+            # in node-id space.  On a planned mesh, axis index i holds
+            # node mesh_plan.flat[i], so compose with its inverse; on an
+            # identity mesh the node at axis index i IS node i.
+            if plan.mesh_plan is not None:
+                flat = plan.mesh_plan.flat
+                if flat.size == n_ep and set(map(int, flat)) == set(entry.group):
+                    pos = {int(node): i for i, node in enumerate(flat)}
+                    order = tuple(pos[int(node)] for node in entry.perm)
+                # else: axis indices don't map 1:1 onto plan nodes
+                # (multi-axis mesh) — leave the identity shift ring
+            else:
+                order = tuple(int(i) for i in entry.local_perm)
     _EP_STATE.update(
         mesh=mesh,
-        ep=ep_axis if ep_axis in mesh.axis_names else None,
+        ep=ep,
         tp=tp_axis if tp_axis and tp_axis in mesh.axis_names else None,
         dp=dp,
+        a2a_order=order,
     )
 
 
 def clear_ep():
-    _EP_STATE.update(mesh=None, ep=None, tp=None, dp=())
+    _EP_STATE.update(mesh=None, ep=None, tp=None, dp=(), a2a_order=None)
 
 
 def ep_armed(cfg: ModelConfig) -> bool:
@@ -67,26 +102,53 @@ def ep_armed(cfg: ModelConfig) -> bool:
     return cfg.n_experts % n_ep == 0
 
 
-def _a2a_shift(x: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+def _shift_perms(n: int, order: Optional[Tuple[int, ...]] = None):
+    """Static per-round (src, dst) pairs of the shift-scheduled a2a.
+
+    ``order`` is a ring order of the n shards (``order[pos] = shard``):
+    round k pairs every shard with the peer k steps ahead *along that
+    ring*, so a solved rank order from the plan compiler's
+    ``AllToAllCost`` changes which physical links each round crosses —
+    the identity order reproduces the classic i -> i+k shift exactly.
+    Every round is a bijection and every ordered pair appears exactly
+    once across the n-1 rounds (property-tested).
+    """
+    if order is None:
+        order = tuple(range(n))
+    assert sorted(order) == list(range(n)), f"bad shift order {order}"
+    pos = {s: p for p, s in enumerate(order)}
+    return [
+        [(i, order[(pos[i] + k) % n]) for i in range(n)]
+        for k in range(1, n)
+    ]
+
+
+def _a2a_shift(x: jnp.ndarray, axis: str, n: int,
+               order: Optional[Tuple[int, ...]] = None) -> jnp.ndarray:
     """All-to-all as N-1 shift rounds of ``ppermute``.
 
     x: [n, ...] — piece j is addressed to shard j; returns [n, ...] with
     piece s received from shard s.  This is the shift-scheduled a2a the
-    paper's ``AllToAllCost`` models (round k: shard i -> shard i+k), it
-    lowers to native collective-permutes on every backend (XLA:CPU has no
-    native all-to-all and would decompose into all-gathers, inflating
-    both real traffic and accounting), and its wire bytes are exactly
-    (n-1)/n of the buffer.
+    paper's ``AllToAllCost`` models (round k: shard i -> shard i+k along
+    the ``order`` ring), it lowers to native collective-permutes on every
+    backend (XLA:CPU has no native all-to-all and would decompose into
+    all-gathers, inflating both real traffic and accounting), and its
+    wire bytes are exactly (n-1)/n of the buffer.
     """
     me = jax.lax.axis_index(axis)
+    sigma = jnp.asarray(order if order is not None else range(n),
+                        dtype=jnp.int32)
+    pos_of = jnp.zeros((n,), jnp.int32).at[sigma].set(
+        jnp.arange(n, dtype=jnp.int32))
     out = jnp.zeros_like(x)
     out = jax.lax.dynamic_update_index_in_dim(
         out, jnp.take(x, me, axis=0), me, 0)
-    for k in range(1, n):
-        perm = [(i, (i + k) % n) for i in range(n)]
-        sent = jnp.take(x, (me + k) % n, axis=0)
+    for k, perm in enumerate(_shift_perms(n, order), start=1):
+        dst = sigma[(pos_of[me] + k) % n]
+        sent = jnp.take(x, dst, axis=0)
         recv = jax.lax.ppermute(sent, axis, perm)
-        out = jax.lax.dynamic_update_index_in_dim(out, recv, (me - k) % n, 0)
+        src = sigma[(pos_of[me] - k) % n]
+        out = jax.lax.dynamic_update_index_in_dim(out, recv, src, 0)
     return out
 
 
@@ -98,6 +160,7 @@ def moe_a2a(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarr
     ep_axis: str = _EP_STATE["ep"]
     tp_axis = _EP_STATE["tp"]
     dp = _EP_STATE["dp"]
+    a2a_order = _EP_STATE["a2a_order"]
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n_ep = sizes[ep_axis]
     E, K = cfg.n_experts, cfg.moe_top_k
@@ -167,9 +230,11 @@ def moe_a2a(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarr
 
         # --- all-to-all over the EP axis (shift-scheduled ppermutes) -----
         recv_x = _a2a_shift(
-            send_x.reshape(n_ep, C, D), ep_axis, n_ep).reshape(n_ep * C, D)
+            send_x.reshape(n_ep, C, D), ep_axis, n_ep,
+            order=a2a_order).reshape(n_ep * C, D)
         recv_e = _a2a_shift(
-            send_e.reshape(n_ep, C), ep_axis, n_ep).reshape(n_ep * C)
+            send_e.reshape(n_ep, C), ep_axis, n_ep,
+            order=a2a_order).reshape(n_ep * C)
 
         # --- local expert FFNs (full weights via TP gather) --------------
         w1 = gather_w(pp["w1"], 2)
@@ -196,7 +261,8 @@ def moe_a2a(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarr
 
         # --- return trip + combine ---------------------------------------
         ret = _a2a_shift(
-            back.reshape(n_ep, C, D), ep_axis, n_ep).reshape(n_ep * C, D)
+            back.reshape(n_ep, C, D), ep_axis, n_ep,
+            order=a2a_order).reshape(n_ep * C, D)
         ok = slot_of >= 0
         contrib = jnp.where(ok[:, None], ret[jnp.maximum(slot_of, 0)], 0)
         y = jnp.zeros((T, D), xl.dtype).at[tok].add(contrib * wk[:, None])

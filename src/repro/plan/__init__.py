@@ -1,0 +1,35 @@
+"""repro.plan — collective plan compiler, plan cache, planning service.
+
+End-to-end::
+
+    fabric  = make_tpu_fleet(...)                    # or a live cluster
+    probed  = probe_fabric(fabric)                   # paper §IV-B probing
+    mix     = JobMix.from_hlo(hlo_text)              # or declared directly
+    service = PlanningService(PlanCompiler(fabric=fabric),
+                              PlanCache(store_dir=".plan_cache"))
+    plan    = service.request(probed, mix, mesh_shape=(16, 16),
+                              axis_names=("data", "model"))
+    mesh    = make_planned_mesh(plan)                # launch integration
+    entry   = plan.lookup("all-to-all", 4e6)         # per-op consumers
+
+See DESIGN.md §5 for the architecture.
+"""
+
+from .cache import (  # noqa: F401
+    DriftMonitor,
+    DriftReport,
+    FabricFingerprint,
+    PlanCache,
+    fabric_fingerprint,
+)
+from .compiler import (  # noqa: F401
+    CollectiveRequest,
+    JobMix,
+    Plan,
+    PlanCompiler,
+    PlanEntry,
+    SolveBudget,
+    candidate_algorithms,
+    size_bucket,
+)
+from .service import PlanningService  # noqa: F401

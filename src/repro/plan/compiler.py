@@ -1,0 +1,505 @@
+"""Collective plan compiler: joint (algorithm, chunking, rank order) selection.
+
+The paper's pipeline optimizes one collective at a time, but a real job
+issues a *mix* of all-reduce / all-gather / reduce-scatter / all-to-all
+at many message sizes, and the best (algorithm, chunk count, rank
+permutation) differs per op and size band (PCCL, Won et al.; the MCF
+reformulation, Arzani et al.).  This module compiles the whole mix once:
+
+* a :class:`JobMix` declares the collectives a job issues — directly, or
+  pulled from optimized HLO via :meth:`JobMix.from_hlo` (which wraps
+  :func:`repro.launch.hlo_analysis.parse_collectives`);
+* :class:`PlanCompiler` enumerates, per (collective, message-size bucket,
+  process group), every feasible schedule from
+  :data:`repro.core.schedule.SCHEDULES`, solves a rank permutation for
+  each with the vectorized solver (:func:`repro.core.solver.solve`), and
+  scores (algorithm, chunks, perm) candidates against the
+  contention-aware simulator (:mod:`repro.core.simulator`) as the oracle
+  — falling back to the analytic cost model when no fabric is available
+  (live probing on real hardware);
+* the result is a :class:`Plan`: a JSON-serializable table of
+  :class:`PlanEntry` rows plus an optional N-D :class:`MeshPlan`, keyed
+  by the fabric fingerprint it was compiled against (see
+  :mod:`repro.plan.cache`).
+
+Message sizes are bucketed per octave (log2) so a job's histogram folds
+into a handful of entries and cache keys stay canonical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_models import make_cost_model
+from repro.core.probe import ProbeResult
+from repro.core.reorder import MeshPlan, mesh_axis_cost, optimize_mesh_assignment
+from repro.core.schedule import SCHEDULES
+from repro.core.simulator import simulate_rounds
+from repro.core.solver import solve
+from repro.core.topology import Fabric
+
+__all__ = [
+    "CollectiveRequest",
+    "JobMix",
+    "PlanEntry",
+    "Plan",
+    "PlanCompiler",
+    "SolveBudget",
+    "candidate_algorithms",
+    "size_bucket",
+]
+
+#: Collective ops the compiler plans for.  ``collective-permute`` is
+#: deliberately absent: it is already an explicit point-to-point schedule,
+#: so there is no algorithm choice to make.
+PLANNED_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all")
+
+#: schedule algo -> cost-model algo the solver optimizes the rank order
+#: with (the simulator then scores the *actual* schedule).
+_SOLVER_MODEL = {
+    "ring": "ring",
+    "ring_sequential": "ring",
+    "halving_doubling": "halving_doubling",
+    "double_binary_tree": "double_binary_tree",
+    "bcube": "bcube",
+    "ring_all_gather": "ring",
+    "recursive_doubling": "halving_doubling",
+    "all_to_all": "all_to_all",
+}
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 2 and n & (n - 1) == 0
+
+
+def _is_pow(n: int, base: int) -> bool:
+    m = 1
+    while m < n:
+        m *= base
+    return m == n and n >= base
+
+
+def candidate_algorithms(op: str, n: int) -> List[Tuple[str, Dict[str, int]]]:
+    """Feasible (schedule algo, builder kwargs) pairs for ``op`` at size n.
+
+    Power-of-two-only schedules are gated on n (see the ValueError
+    contracts in :mod:`repro.core.schedule`); bcube prefers base 4 when
+    n is a power of 4, else base 2 when n is a power of two.
+    """
+    if op == "all-reduce":
+        out: List[Tuple[str, Dict[str, int]]] = [
+            ("ring", {}), ("ring_sequential", {}), ("double_binary_tree", {})]
+        if _is_pow2(n):
+            out.append(("halving_doubling", {}))
+            out.append(("bcube", {"base": 4 if _is_pow(n, 4) else 2}))
+        return out
+    if op in ("all-gather", "reduce-scatter"):
+        out = [("ring_all_gather", {})]
+        if _is_pow2(n):
+            out.append(("recursive_doubling", {}))
+        return out
+    if op == "all-to-all":
+        return [("all_to_all", {})]
+    return []
+
+
+def size_bucket(size_bytes: float) -> int:
+    """Octave bucket id: floor(log2(size)).  Sizes < 1 byte collapse to 0."""
+    return int(np.floor(np.log2(max(float(size_bytes), 1.0))))
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRequest:
+    """One line of a job's collective histogram."""
+
+    op: str                                  # one of PLANNED_OPS
+    size_bytes: float                        # per-call payload
+    count: float = 1.0                       # calls per step / per query
+    group: Optional[Tuple[int, ...]] = None  # node ids; None = all nodes
+
+    def __post_init__(self):
+        if self.op not in PLANNED_OPS:
+            raise ValueError(f"unknown collective op {self.op!r}; "
+                             f"expected one of {PLANNED_OPS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class JobMix:
+    """The collective mix one job issues (its message-size histogram)."""
+
+    requests: Tuple[CollectiveRequest, ...]
+    name: str = "job"
+
+    def __post_init__(self):
+        object.__setattr__(self, "requests", tuple(self.requests))
+
+    def key(self) -> str:
+        """Canonical cache/dedup key: bucketed, sorted, group-explicit."""
+        rows = sorted(
+            (r.op, size_bucket(r.size_bytes),
+             list(r.group) if r.group is not None else [])
+            for r in self.requests
+        )
+        return json.dumps(rows, separators=(",", ":"))
+
+    @staticmethod
+    def from_hlo(hlo_text: str, name: str = "hlo",
+                 scale_loops: bool = True) -> "JobMix":
+        """Build a mix from optimized HLO text.
+
+        Wraps :func:`repro.launch.hlo_analysis.parse_collectives`; each
+        detail row (comp, op, total_bytes, multiplier) becomes a request
+        of ``total_bytes / multiplier`` per call, ``multiplier`` calls.
+        ``collective-permute`` rows are skipped (no algorithm choice).
+        """
+        from repro.launch.hlo_analysis import parse_collectives
+
+        stats = parse_collectives(hlo_text, scale_loops=scale_loops)
+        reqs = []
+        for _comp, op, total_bytes, mult in stats.details:
+            if op not in PLANNED_OPS or total_bytes <= 0 or mult <= 0:
+                continue
+            reqs.append(CollectiveRequest(
+                op=op, size_bytes=total_bytes / mult, count=float(mult)))
+        return JobMix(requests=tuple(reqs), name=name)
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """The compiled choice for one (op, size bucket, process group)."""
+
+    op: str
+    bucket: int
+    size_bytes: float                 # representative payload of the bucket
+    group: Tuple[int, ...]            # global node ids, sorted
+    algo: str                         # key into SCHEDULES
+    algo_kwargs: Dict[str, int]       # e.g. {"base": 4} for bcube
+    chunks: int                       # payload split into this many pipelined pieces
+    perm: Tuple[int, ...]             # perm[rank] = global node id
+    expected_time: float              # oracle seconds per call for the choice
+    identity_times: Dict[str, float]  # algo -> oracle seconds at identity order, chunks=1
+    solver_cost: float                # cost-model objective of perm
+    oracle: str                       # "simulator" | "cost_model"
+
+    @property
+    def local_perm(self) -> np.ndarray:
+        """perm expressed as positions within ``group`` (rank -> index)."""
+        pos = {node: i for i, node in enumerate(self.group)}
+        return np.asarray([pos[node] for node in self.perm], dtype=np.int64)
+
+    @property
+    def best_identity_time(self) -> float:
+        return min(self.identity_times.values())
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["group"] = list(self.group)
+        d["perm"] = list(self.perm)
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "PlanEntry":
+        return PlanEntry(
+            op=d["op"], bucket=int(d["bucket"]),
+            size_bytes=float(d["size_bytes"]),
+            group=tuple(int(x) for x in d["group"]),
+            algo=d["algo"],
+            algo_kwargs={k: int(v) for k, v in d["algo_kwargs"].items()},
+            chunks=int(d["chunks"]),
+            perm=tuple(int(x) for x in d["perm"]),
+            expected_time=float(d["expected_time"]),
+            identity_times={k: float(v) for k, v in d["identity_times"].items()},
+            solver_cost=float(d["solver_cost"]),
+            oracle=d["oracle"],
+        )
+
+
+EntryKey = Tuple[str, int, Tuple[int, ...]]
+
+
+@dataclasses.dataclass
+class Plan:
+    """A compiled collective plan for one fabric + one job mix."""
+
+    fingerprint: "FabricFingerprint"          # see repro.plan.cache
+    n: int
+    entries: Dict[EntryKey, PlanEntry]
+    mesh_plan: Optional[MeshPlan]
+    compile_seconds: float
+    mix_key: str
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    # -- queries ----------------------------------------------------------
+    def _norm_group(self, group: Optional[Sequence[int]]) -> Tuple[int, ...]:
+        if group is None:
+            return tuple(range(self.n))
+        return tuple(sorted(int(g) for g in group))
+
+    def lookup(self, op: str, size_bytes: float,
+               group: Optional[Sequence[int]] = None) -> Optional[PlanEntry]:
+        """Entry for ``op`` at the nearest size bucket for ``group``."""
+        g = self._norm_group(group)
+        want = size_bucket(size_bytes)
+        best, best_d = None, None
+        for (eop, bucket, eg), entry in self.entries.items():
+            if eop != op or eg != g:
+                continue
+            d = abs(bucket - want)
+            if best_d is None or d < best_d:
+                best, best_d = entry, d
+        return best
+
+    def total_time(self, mix: JobMix) -> float:
+        """Oracle seconds for one pass over the mix under this plan."""
+        total = 0.0
+        for r in mix.requests:
+            e = self.lookup(r.op, r.size_bytes, r.group)
+            if e is not None:
+                total += r.count * e.expected_time
+        return total
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        from .cache import FabricFingerprint  # local: cache imports compiler
+
+        assert isinstance(self.fingerprint, FabricFingerprint)
+        d = {
+            "version": 1,
+            "fingerprint": self.fingerprint.to_dict(),
+            "n": self.n,
+            "entries": [e.to_dict() for e in self.entries.values()],
+            "mesh_plan": None,
+            "compile_seconds": self.compile_seconds,
+            "mix_key": self.mix_key,
+            "meta": self.meta,
+        }
+        if self.mesh_plan is not None:
+            mp = self.mesh_plan
+            d["mesh_plan"] = {
+                "assignment": mp.assignment.tolist(),
+                "axis_names": list(mp.axis_names),
+                "cost": mp.cost,
+                "baseline_cost": mp.baseline_cost,
+                "per_axis": dict(mp.per_axis),
+            }
+        return json.dumps(d, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "Plan":
+        from .cache import FabricFingerprint
+
+        d = json.loads(s)
+        entries = {}
+        for ed in d["entries"]:
+            e = PlanEntry.from_dict(ed)
+            entries[(e.op, e.bucket, e.group)] = e
+        mesh_plan = None
+        if d.get("mesh_plan"):
+            mp = d["mesh_plan"]
+            mesh_plan = MeshPlan(
+                assignment=np.asarray(mp["assignment"], dtype=np.int64),
+                axis_names=tuple(mp["axis_names"]),
+                cost=float(mp["cost"]),
+                baseline_cost=float(mp["baseline_cost"]),
+                per_axis={k: float(v) for k, v in mp["per_axis"].items()},
+            )
+        return Plan(
+            fingerprint=FabricFingerprint.from_dict(d["fingerprint"]),
+            n=int(d["n"]),
+            entries=entries,
+            mesh_plan=mesh_plan,
+            compile_seconds=float(d["compile_seconds"]),
+            mix_key=d["mix_key"],
+            meta=dict(d.get("meta", {})),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveBudget:
+    """Solver effort per entry; the service shares one compile across
+    jobs, so a few seconds of compile buys every consumer."""
+
+    iters: int = 800
+    chains: int = 8
+    chunk_candidates: Tuple[int, ...] = (1, 2, 4)
+    #: don't bother chunking payloads below this (latency-bound regime)
+    min_chunk_bytes: float = 64 * 1024
+
+
+class PlanCompiler:
+    """Compile a :class:`Plan` from a probe (or fabric) and a job mix.
+
+    ``fabric``, when given, is the contention-aware oracle every
+    candidate is validated against (offline: the synthetic "real cloud").
+    Without it — live probing on hardware we cannot simulate — candidates
+    are scored by their analytic cost model, which PR-0's Table-I
+    reproduction showed rank-correlates with the simulator.
+    """
+
+    def __init__(self, fabric: Optional[Fabric] = None,
+                 budget: Optional[SolveBudget] = None, seed: int = 0):
+        self.fabric = fabric
+        self.budget = budget or SolveBudget()
+        self.seed = seed
+
+    # -- inputs -----------------------------------------------------------
+    @staticmethod
+    def _matrices(probe) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """(lat, bw) from a ProbeResult, Fabric, or plain cost matrix."""
+        if isinstance(probe, ProbeResult):
+            return probe.lat, probe.bw
+        if isinstance(probe, Fabric):
+            return probe.lat, probe.bw
+        c = np.asarray(probe, dtype=np.float64)
+        assert c.ndim == 2 and c.shape[0] == c.shape[1]
+        return c, None
+
+    def _model(self, algo: str, lat, bw, size_bytes: float,
+               akw: Dict[str, int]):
+        m_algo = _SOLVER_MODEL[algo]
+        kwargs = {"base": akw["base"]} if "base" in akw else {}
+        if bw is not None:
+            return make_cost_model(m_algo, size_bytes=size_bytes,
+                                   lat=lat, bw=bw, **kwargs)
+        # paper mode: one latency-centric matrix, rounds rescale linearly
+        return make_cost_model(m_algo, cost_matrix=lat,
+                               size_bytes=size_bytes, **kwargs)
+
+    # -- oracle -----------------------------------------------------------
+    def _oracle_time(self, algo: str, akw: Dict[str, int],
+                     node_perm: Sequence[int], size_bytes: float,
+                     model_cache: Dict, lat, bw) -> float:
+        """Seconds for one execution of ``algo`` at ``size_bytes``."""
+        if self.fabric is not None:
+            rounds = SCHEDULES[algo](list(node_perm), size_bytes, **akw)
+            return simulate_rounds(self.fabric, rounds)
+        key = (algo, tuple(sorted(akw.items())), float(size_bytes))
+        model = model_cache.get(key)
+        if model is None:
+            model = model_cache[key] = self._model(algo, lat, bw, size_bytes, akw)
+        pos = {node: i for i, node in enumerate(sorted(node_perm))}
+        local = np.asarray([pos[x] for x in node_perm], dtype=np.int64)
+        return float(model.cost(local))
+
+    # -- compilation ------------------------------------------------------
+    def compile(self, probe, mix: JobMix,
+                mesh_shape: Optional[Sequence[int]] = None,
+                axis_names: Optional[Sequence[str]] = None,
+                fingerprint=None) -> Plan:
+        from .cache import fabric_fingerprint
+
+        t0 = time.perf_counter()
+        lat, bw = self._matrices(probe)
+        n = lat.shape[0]
+        if fingerprint is None:
+            fingerprint = fabric_fingerprint(lat, bw)
+
+        # Merge requests into (op, bucket, group) cells; the compile size
+        # is the count-weighted geometric mean of the cell's sizes.
+        cells: Dict[EntryKey, List[CollectiveRequest]] = {}
+        for r in mix.requests:
+            g = tuple(sorted(r.group)) if r.group is not None else tuple(range(n))
+            if any(x < 0 or x >= n for x in g):
+                raise ValueError(f"request group {g} outside fabric of {n} nodes")
+            cells.setdefault((r.op, size_bucket(r.size_bytes), g), []).append(r)
+
+        entries: Dict[EntryKey, PlanEntry] = {}
+        for (op, bucket, group), reqs in sorted(cells.items()):
+            w = np.asarray([r.count for r in reqs])
+            s = np.asarray([r.size_bytes for r in reqs])
+            repr_size = float(np.exp(np.average(np.log(np.maximum(s, 1.0)),
+                                                weights=np.maximum(w, 1e-9))))
+            entries[(op, bucket, group)] = self._compile_entry(
+                op, bucket, group, repr_size, lat, bw)
+
+        mesh_plan = None
+        if mesh_shape is not None:
+            axis_names = tuple(axis_names or
+                               ("pod", "data", "model")[-len(tuple(mesh_shape)):])
+            # Mesh objective at the mix's dominant payload: lat + S/bw when
+            # bandwidth was probed — multi-MB payloads are bw-dominated on
+            # TPU fabrics (see topology.Fabric.cost_matrix).
+            mesh_payload = max((r.size_bytes for r in mix.requests), default=0.0)
+            c_mesh = lat.copy()
+            if bw is not None and mesh_payload:
+                with np.errstate(divide="ignore"):
+                    c_mesh = c_mesh + mesh_payload / bw
+            np.fill_diagonal(c_mesh, 0.0)
+            c_mesh = np.maximum(c_mesh, c_mesh.T)
+            mesh_plan = optimize_mesh_assignment(
+                c_mesh, tuple(mesh_shape), axis_names, seed=self.seed)
+            if mesh_plan.cost > mesh_plan.baseline_cost:
+                # the heuristic can lose to identity on tiny/uniform
+                # fabrics; a compiled plan must never ship a regression
+                ident = np.arange(n, dtype=np.int64).reshape(tuple(mesh_shape))
+                mesh_plan = MeshPlan(
+                    assignment=ident, axis_names=axis_names,
+                    cost=mesh_plan.baseline_cost,
+                    baseline_cost=mesh_plan.baseline_cost,
+                    per_axis={axis_names[a]: mesh_axis_cost(ident, c_mesh, a)
+                              for a in range(len(axis_names))})
+
+        return Plan(
+            fingerprint=fingerprint,
+            n=n,
+            entries=entries,
+            mesh_plan=mesh_plan,
+            compile_seconds=time.perf_counter() - t0,
+            mix_key=mix.key(),
+            meta={
+                "mix_name": mix.name,
+                "oracle": "simulator" if self.fabric is not None else "cost_model",
+                "budget": dataclasses.asdict(self.budget),
+            },
+        )
+
+    def _compile_entry(self, op: str, bucket: int, group: Tuple[int, ...],
+                       size_bytes: float, lat, bw) -> PlanEntry:
+        g = np.asarray(group, dtype=np.int64)
+        n_g = len(g)
+        sub_lat = lat[np.ix_(g, g)]
+        sub_bw = bw[np.ix_(g, g)] if bw is not None else None
+        oracle = "simulator" if self.fabric is not None else "cost_model"
+        model_cache: Dict = {}
+
+        best = None                       # (time, algo, akw, chunks, perm, mcost)
+        identity_times: Dict[str, float] = {}
+        identity_local = np.arange(n_g)
+        # Chunking is scored as serial pieces, and the analytic cost
+        # models are affine in payload — so without the contention-aware
+        # simulator (whose fair-share rates are nonlinear) chunks > 1 is
+        # mathematically dominated by chunks=1: skip the wasted oracles.
+        chunk_cands = self.budget.chunk_candidates \
+            if self.fabric is not None else (1,)
+        for algo, akw in candidate_algorithms(op, n_g):
+            model = self._model(algo, sub_lat, sub_bw, size_bytes, akw)
+            solved = solve(model, method="auto", iters=self.budget.iters,
+                           chains=self.budget.chains, seed=self.seed)
+            for local in (identity_local, np.asarray(solved.perm)):
+                node_perm = g[local]
+                for chunks in chunk_cands:
+                    if chunks > 1 and size_bytes / chunks < self.budget.min_chunk_bytes:
+                        continue
+                    t = chunks * self._oracle_time(
+                        algo, akw, node_perm.tolist(), size_bytes / chunks,
+                        model_cache, sub_lat, sub_bw)
+                    if local is identity_local and chunks == 1:
+                        identity_times[algo] = t
+                    cand = (t, algo, akw, chunks, node_perm, float(model.cost(local)))
+                    if best is None or t < best[0]:
+                        best = cand
+
+        assert best is not None, f"no feasible algorithm for {op} over {n_g} nodes"
+        t, algo, akw, chunks, node_perm, mcost = best
+        return PlanEntry(
+            op=op, bucket=bucket, size_bytes=size_bytes, group=group,
+            algo=algo, algo_kwargs=dict(akw), chunks=chunks,
+            perm=tuple(int(x) for x in node_perm),
+            expected_time=float(t), identity_times=identity_times,
+            solver_cost=mcost, oracle=oracle,
+        )

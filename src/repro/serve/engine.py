@@ -44,13 +44,41 @@ def make_serve_step(model) -> Callable:
 
 
 class GenerationEngine:
-    def __init__(self, model, params, gen_cfg: Optional[GenerationConfig] = None):
+    def __init__(self, model, params, gen_cfg: Optional[GenerationConfig] = None,
+                 plan=None):
         self.model = model
         self.params = params
         self.cfg = gen_cfg or GenerationConfig()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
         self.stats: Dict[str, float] = {"prefill_tokens": 0, "decode_steps": 0}
+        #: compiled collective plan (repro.plan.Plan) for the serving mesh;
+        #: the engine's TP collectives ride the mesh built from it, and
+        #: per-op entries are surfaced for operators via collective_hints()
+        self.plan = plan
+        if plan is not None:
+            self.stats["plan_fingerprint"] = plan.fingerprint.digest
+
+    def collective_hints(self, payload_bytes: float = 1e6) -> Dict[str, Dict]:
+        """Per-op plan entries the decode-path collectives map onto.
+
+        TP decode issues all-gather / reduce-scatter per layer; MoE
+        archs add the EP all-to-all.  Returns {op: entry summary} from
+        the plan's nearest size buckets (empty without a plan).
+        """
+        if self.plan is None:
+            return {}
+        out: Dict[str, Dict] = {}
+        for op in ("all-gather", "reduce-scatter", "all-to-all"):
+            e = self.plan.lookup(op, payload_bytes)
+            if e is not None:
+                out[op] = {
+                    "algo": e.algo, "chunks": e.chunks,
+                    "expected_time": e.expected_time,
+                    "speedup_vs_identity":
+                        e.best_identity_time / max(e.expected_time, 1e-30),
+                }
+        return out
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:

@@ -38,7 +38,7 @@ def test_bcube_requires_power_of_base():
     c = _rand_cost(16)
     m = make_cost_model("bcube", c, 1e6, base=4)
     assert m.cost(np.arange(16)) > 0
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         make_cost_model("bcube", _rand_cost(12), 1e6, base=4)
 
 

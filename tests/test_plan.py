@@ -1,0 +1,399 @@
+"""Tests for the ``repro.plan`` subsystem.
+
+Covers the ISSUE-2 acceptance surface: compiler quality vs fixed
+baselines, plan serialization round-trip, fingerprint stability under
+probe noise (and order sensitivity under relabeling), cache LRU +
+persistent store, drift-based invalidation, and concurrent service
+dedup.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    make_datacenter,
+    make_tpu_fleet,
+    probe_fabric,
+    scramble,
+)
+from repro.plan import (
+    CollectiveRequest,
+    DriftMonitor,
+    JobMix,
+    Plan,
+    PlanCache,
+    PlanCompiler,
+    PlanningService,
+    SolveBudget,
+    candidate_algorithms,
+    fabric_fingerprint,
+    size_bucket,
+)
+
+BUDGET = SolveBudget(iters=150, chains=4)
+
+
+@pytest.fixture(scope="module")
+def fab():
+    fabric, _ = scramble(make_datacenter(16, seed=0), seed=1)
+    return fabric
+
+
+@pytest.fixture(scope="module")
+def probe(fab):
+    return probe_fabric(fab, seed=0)
+
+
+@pytest.fixture(scope="module")
+def mix():
+    return JobMix((
+        CollectiveRequest("all-reduce", 32e6),
+        CollectiveRequest("all-gather", 4e6, count=2.0),
+        CollectiveRequest("all-to-all", 2e6, count=2.0),
+        CollectiveRequest("all-reduce", 1e6, count=1.0,
+                          group=tuple(range(8))),
+    ), name="test")
+
+
+@pytest.fixture(scope="module")
+def plan(fab, probe, mix):
+    comp = PlanCompiler(fabric=fab, budget=BUDGET)
+    return comp.compile(probe, mix, mesh_shape=(4, 4),
+                        axis_names=("data", "model"))
+
+
+# -- compiler --------------------------------------------------------------
+
+def test_compiler_covers_every_cell(plan, mix):
+    assert len(plan.entries) == 4          # distinct (op, bucket, group)
+    for r in mix.requests:
+        e = plan.lookup(r.op, r.size_bytes, r.group)
+        assert e is not None
+        assert e.op == r.op
+        assert e.algo in dict(candidate_algorithms(r.op, len(e.group)))
+        assert sorted(e.perm) == sorted(e.group)
+        assert e.expected_time > 0
+
+
+def test_plan_beats_or_matches_every_identity_baseline(plan):
+    """The joint choice can never lose to any single identity-order
+    candidate (they are all in the searched candidate set)."""
+    for e in plan.entries.values():
+        assert e.expected_time <= min(e.identity_times.values()) + 1e-12
+
+
+def test_plan_strictly_beats_best_fixed_on_scrambled_fabric(plan, mix):
+    total = plan.total_time(mix)
+    fixed = sum(r.count * plan.lookup(r.op, r.size_bytes, r.group)
+                .best_identity_time for r in mix.requests)
+    assert total < fixed              # reordering must buy something here
+
+
+def test_subgroup_entry_uses_group_nodes_only(plan):
+    e = plan.lookup("all-reduce", 1e6, group=tuple(range(8)))
+    assert e.group == tuple(range(8))
+    assert set(e.perm) == set(range(8))
+    local = e.local_perm
+    assert sorted(local.tolist()) == list(range(8))
+
+
+def test_lookup_nearest_bucket(plan):
+    big = plan.lookup("all-reduce", 32e6)
+    assert plan.lookup("all-reduce", 100e6) is big   # nearest is the 32MB cell
+    assert plan.lookup("reduce-scatter", 1e6) is None
+
+
+def test_mesh_plan_improves_identity(plan):
+    mp = plan.mesh_plan
+    assert mp is not None and mp.assignment.shape == (4, 4)
+    assert mp.cost <= mp.baseline_cost
+
+
+def test_cost_model_oracle_without_fabric(probe, mix):
+    comp = PlanCompiler(fabric=None, budget=BUDGET)
+    p = comp.compile(probe, mix)
+    assert p.meta["oracle"] == "cost_model"
+    for e in p.entries.values():
+        assert e.oracle == "cost_model"
+        assert e.expected_time <= min(e.identity_times.values()) + 1e-12
+
+
+def test_mix_from_hlo():
+    hlo = """
+ENTRY main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), to_apply=%add
+  %ag = f32[4096]{0} all-gather(%p0), dimensions={0}
+  %cp = f32[1024]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+}
+"""
+    m = JobMix.from_hlo(hlo)
+    ops = sorted(r.op for r in m.requests)
+    assert ops == ["all-gather", "all-reduce"]     # permute has no algo choice
+    ar = [r for r in m.requests if r.op == "all-reduce"][0]
+    assert ar.size_bytes == 4096                   # 1024 f32
+    assert size_bucket(ar.size_bytes) == 12
+
+
+def test_mix_key_canonical():
+    a = JobMix((CollectiveRequest("all-reduce", 1e6),
+                CollectiveRequest("all-gather", 2e6)))
+    b = JobMix((CollectiveRequest("all-gather", 2.05e6),  # same octave bucket
+                CollectiveRequest("all-reduce", 1.02e6)))
+    assert a.key() == b.key()
+    c = JobMix((CollectiveRequest("all-reduce", 4e6),))   # different bucket
+    assert a.key() != c.key()
+
+
+# -- serialization ---------------------------------------------------------
+
+def test_plan_round_trip_identical(plan):
+    p2 = Plan.from_json(plan.to_json())
+    assert p2.fingerprint == plan.fingerprint
+    assert p2.mix_key == plan.mix_key
+    assert set(p2.entries) == set(plan.entries)
+    for k, e in plan.entries.items():
+        e2 = p2.entries[k]
+        assert e2.to_dict() == e.to_dict()
+    assert np.array_equal(p2.mesh_plan.assignment, plan.mesh_plan.assignment)
+    assert p2.mesh_plan.axis_names == plan.mesh_plan.axis_names
+    # and a second round trip is byte-stable
+    assert Plan.from_json(p2.to_json()).to_json() == p2.to_json()
+
+
+# -- fingerprints ----------------------------------------------------------
+
+def _fp(probe_result):
+    return fabric_fingerprint(probe_result.lat, probe_result.bw)
+
+
+def test_fingerprint_stable_under_probe_noise(fab):
+    fps = [_fp(probe_fabric(fab, seed=s)) for s in range(6)]
+    for f in fps[1:]:
+        assert fps[0].matches(f)
+
+
+def test_fingerprint_distinguishes_fabrics(fab):
+    fp = _fp(probe_fabric(fab, seed=0))
+    tpu, _ = scramble(make_tpu_fleet(n_pods=1, pod_shape=(4, 4), seed=3),
+                      seed=4)
+    assert not fp.matches(_fp(probe_fabric(tpu, seed=0)))
+    other, _ = scramble(make_datacenter(16, seed=7), seed=8)
+    assert not fp.matches(_fp(probe_fabric(other, seed=0)))
+
+
+def test_fingerprint_is_order_sensitive(fab):
+    """A relabeled (re-scrambled) fabric must NOT hit the same plans:
+    the plan's permutations refer to concrete node ids."""
+    fp = _fp(probe_fabric(fab, seed=0))
+    relabeled, _ = scramble(fab, seed=9)
+    assert not fp.matches(_fp(probe_fabric(relabeled, seed=0)))
+
+
+def test_fingerprint_sees_bandwidth_collapse(fab):
+    """Bandwidth drops with latency unchanged must break the match —
+    cached plans were compiled against the old bw profile."""
+    p = probe_fabric(fab, seed=0)
+    fp = fabric_fingerprint(p.lat, p.bw)
+    collapsed = p.bw.copy()
+    collapsed[4, :] /= 16.0
+    collapsed[:, 4] /= 16.0
+    np.fill_diagonal(collapsed, np.inf)
+    assert not fp.matches(fabric_fingerprint(p.lat, collapsed))
+    # latency-only fingerprints never mix with bw-aware ones
+    assert not fp.matches(fabric_fingerprint(p.lat))
+
+
+# -- cache -----------------------------------------------------------------
+
+def test_cache_lru_and_fuzzy_hit(fab, plan):
+    cache = PlanCache(capacity=2)
+    cache.put(plan, "k")
+    # a fresh probe of the same fabric fuzzily matches
+    fp = _fp(probe_fabric(fab, seed=11))
+    assert cache.get(fp, "k") is plan
+    assert cache.get(fp, "other-key") is None
+    assert cache.stats["hits"] == 1 and cache.stats["misses"] == 1
+
+
+def test_cache_persistent_round_trip(tmp_path, fab, plan):
+    store = str(tmp_path / "plans")
+    cache = PlanCache(store_dir=store)
+    cache.put(plan, "k")
+    # new process: fresh cache over the same directory
+    cache2 = PlanCache(store_dir=store)
+    fp = _fp(probe_fabric(fab, seed=12))
+    loaded = cache2.get(fp, "k")
+    assert loaded is not None
+    assert loaded.to_json() == plan.to_json()
+    assert cache2.stats["disk_hits"] == 1
+
+
+def test_cache_capacity_eviction(plan):
+    cache = PlanCache(capacity=1)
+    cache.put(plan, "a")
+    cache.put(plan, "b")
+    assert len(cache) == 1
+    assert cache.get(plan.fingerprint, "a") is None   # evicted
+    assert cache.get(plan.fingerprint, "b") is plan
+
+
+# -- drift invalidation ----------------------------------------------------
+
+def test_drift_invalidates_cache(tmp_path, fab, probe, plan):
+    store = str(tmp_path / "plans")
+    cache = PlanCache(store_dir=store)
+    cache.put(plan, "k")
+    c0 = probe.lat
+    mon = DriftMonitor(plan, c0, cache=cache, threshold=1.15)
+
+    # benign re-probe: small noise, nothing degrades
+    rep = mon.observe(probe_fabric(fab, seed=21).lat)
+    assert not rep.stale and rep.invalidated == 0
+    assert cache.get(plan.fingerprint, "k") is plan
+
+    # inject drift: one node's links slow down 12x
+    bad = c0.copy()
+    bad[3, :] *= 12.0
+    bad[:, 3] *= 12.0
+    np.fill_diagonal(bad, 0.0)
+    rep = mon.observe(np.maximum(bad, bad.T))
+    assert rep.stale and rep.degraded
+    assert rep.invalidated >= 1
+    assert plan.meta.get("stale") is True
+    assert cache.get(plan.fingerprint, "k") is None   # mem + disk dropped
+    # repaired entries keep valid permutations (hot patch until recompile)
+    for key, perm in rep.repaired.items():
+        entry = plan.entries[key]
+        assert sorted(perm) == sorted(entry.group)
+        assert entry.perm == perm
+
+
+# -- planning service ------------------------------------------------------
+
+def _count_compiles(compiler):
+    calls = {"n": 0}
+    orig = compiler.compile
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        time.sleep(0.05)          # widen the dedup window
+        return orig(*a, **kw)
+
+    compiler.compile = wrapped
+    return calls
+
+
+def test_service_dedupes_concurrent_requests(fab, mix):
+    comp = PlanCompiler(fabric=fab, budget=BUDGET)
+    calls = _count_compiles(comp)
+    svc = PlanningService(comp, PlanCache(), max_workers=4)
+    probes = [probe_fabric(fab, seed=s) for s in range(6)]
+    results = [None] * len(probes)
+
+    def worker(i):
+        results[i] = svc.request(probes[i], mix)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(probes))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    svc.close()
+
+    assert calls["n"] == 1, "concurrent identical requests must share a compile"
+    assert all(r is results[0] for r in results)
+    assert svc.stats["requests"] == 6
+    assert svc.stats["compiles"] == 1
+    assert svc.stats["cache_hits"] + svc.stats["dedup_joins"] == 5
+
+
+def test_service_cache_hit_is_fast(fab, probe, mix):
+    comp = PlanCompiler(fabric=fab, budget=BUDGET)
+    svc = PlanningService(comp, PlanCache())
+    t0 = time.perf_counter()
+    first = svc.request(probe, mix)
+    cold = time.perf_counter() - t0
+    warm = float("inf")
+    for s in range(3):
+        t0 = time.perf_counter()
+        again = svc.request(probe_fabric(fab, seed=40 + s), mix)
+        warm = min(warm, time.perf_counter() - t0)
+    svc.close()
+    assert again is first
+    # the full >=100x bar is enforced by benchmarks/plan_compiler.py on
+    # real budgets; under the test's tiny budget 10x leaves headroom
+    assert warm < cold / 10.0
+
+
+def test_service_request_many_batches_same_fabric(fab, mix):
+    comp = PlanCompiler(fabric=fab, budget=BUDGET)
+    calls = _count_compiles(comp)
+    svc = PlanningService(comp, PlanCache())
+    mix2 = JobMix((CollectiveRequest("reduce-scatter", 2e6),), name="serve")
+    plans = svc.request_many([
+        (probe_fabric(fab, seed=50), mix),
+        (probe_fabric(fab, seed=51), mix2),
+    ])
+    svc.close()
+    assert calls["n"] == 1, "same-fingerprint mixes union into one compile"
+    assert plans[0] is plans[1]
+    # the union plan answers both sub-mixes
+    assert plans[0].lookup("all-reduce", 32e6) is not None
+    assert plans[1].lookup("reduce-scatter", 2e6) is not None
+
+
+def test_arm_ep_composes_order_with_mesh_assignment(fab, probe, mix, plan):
+    """arm_ep must express the solved ring in EP *axis-index* space: on a
+    planned mesh axis index i holds node mesh_plan.flat[i], so walking
+    the armed order must visit nodes exactly in the entry's perm order."""
+    from types import SimpleNamespace
+
+    from repro.parallel.moe_a2a import _EP_STATE, arm_ep, clear_ep
+
+    mesh = SimpleNamespace(axis_names=("data",), devices=np.zeros((16,)))
+    arm_ep(mesh, "data", None, plan=plan)
+    order = _EP_STATE["a2a_order"]
+    entry = plan.lookup("all-to-all", 1.0)
+    flat = plan.mesh_plan.flat
+    assert order is not None and sorted(order) == list(range(16))
+    assert [int(flat[i]) for i in order] == list(entry.perm)
+    clear_ep()
+
+    # plan compiled without a mesh: axis index i IS node i -> local perm
+    p2 = PlanCompiler(fabric=fab, budget=BUDGET).compile(probe, mix)
+    arm_ep(mesh, "data", None, plan=p2)
+    e2 = p2.lookup("all-to-all", 1.0)
+    assert _EP_STATE["a2a_order"] == tuple(int(i) for i in e2.local_perm)
+    clear_ep()
+
+    # without a plan the shift ring stays identity (order None)
+    arm_ep(mesh, "data", None)
+    assert _EP_STATE["a2a_order"] is None
+
+
+def test_moe_shift_perms_follow_plan_order():
+    from repro.parallel.moe_a2a import _shift_perms
+
+    n = 8
+    order = (3, 1, 4, 0, 6, 2, 7, 5)
+    rounds = _shift_perms(n, order)
+    assert len(rounds) == n - 1
+    seen = set()
+    for rnd in rounds:
+        srcs = [s for s, _ in rnd]
+        dsts = [d for _, d in rnd]
+        assert sorted(srcs) == list(range(n))     # bijection per round
+        assert sorted(dsts) == list(range(n))
+        for s, d in rnd:
+            assert s != d
+            seen.add((s, d))
+    assert len(seen) == n * (n - 1)               # every pair exactly once
+    # identity order reproduces the classic i -> i+k shift
+    classic = _shift_perms(4, None)
+    assert classic[0] == [(i, (i + 1) % 4) for i in range(4)]

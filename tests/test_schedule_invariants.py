@@ -1,0 +1,129 @@
+"""Schedule-builder invariants for every entry in ``SCHEDULES``.
+
+For any valid (algo, n, perm, size):
+
+* flows stay in-bounds: every endpoint is a node named by ``perm``;
+* no self-flows for n >= 2;
+* every node participates (appears as a src and as a dst);
+* total bytes are conserved under reordering: the multiset structure of
+  a schedule is permutation-independent, so its total wire bytes (and
+  round count) must equal the identity order's;
+* builders with validity constraints raise ValueError with a clear
+  message on bad n instead of asserting (regression for the seed's bare
+  asserts).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback when dev deps absent
+    from _hypothesis_shim import given, settings, st
+
+from repro.core.schedule import (
+    SCHEDULES,
+    bcube_allreduce,
+    halving_doubling_allreduce,
+    recursive_doubling_all_gather,
+)
+
+#: valid world sizes per algo (powers of two / of the bcube base where
+#: required); kept small so the exhaustive flow checks stay fast.
+_VALID_NS = {
+    "ring": (2, 3, 5, 8, 12),
+    "ring_sequential": (2, 3, 5, 8, 12),
+    "halving_doubling": (2, 4, 8, 16),
+    "double_binary_tree": (2, 3, 5, 8, 12),
+    "bcube": (4, 16),
+    "ring_all_gather": (2, 3, 5, 8, 12),
+    "recursive_doubling": (2, 4, 8, 16),
+    "all_to_all": (2, 3, 5, 8, 12),
+}
+
+SIZE = 1e6
+
+
+def _flat(rounds):
+    return [f for rnd in rounds for f in rnd]
+
+
+def _check_invariants(algo, n, seed):
+    build = SCHEDULES[algo]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    nodes = set(int(x) for x in perm)
+
+    rounds = build(perm, SIZE)
+    flows = _flat(rounds)
+    assert flows, f"{algo} produced an empty schedule at n={n}"
+
+    # in-bounds + no self-flows + positive finite payloads
+    for f in flows:
+        assert f.src in nodes and f.dst in nodes, (algo, n, f)
+        assert f.src != f.dst, (algo, n, f)
+        assert np.isfinite(f.size) and f.size > 0, (algo, n, f)
+
+    # every node participates; for all but the naive sequential ring
+    # (where the full buffer circulates 0 -> n-1, so the tail never
+    # sends and the head never receives) on BOTH sides
+    assert {f.src for f in flows} | {f.dst for f in flows} == nodes, (algo, n)
+    if algo != "ring_sequential":
+        assert {f.src for f in flows} == nodes, (algo, n)
+        assert {f.dst for f in flows} == nodes, (algo, n)
+
+    # conservation under reordering: total bytes and round count match
+    # the identity order (the structure is permutation-independent)
+    ident_rounds = build(np.arange(n), SIZE)
+    ident = _flat(ident_rounds)
+    total = sum(f.size for f in flows)
+    total_ident = sum(f.size for f in ident)
+    assert total == pytest.approx(total_ident, rel=1e-12), (algo, n)
+    # per-round flow counts also survive the permutation
+    assert [len(r) for r in rounds] == [len(r) for r in ident_rounds], (algo, n)
+
+
+@given(st.sampled_from(sorted(SCHEDULES)), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_schedule_invariants(algo, seed):
+    ns = _VALID_NS[algo]
+    n = ns[seed % len(ns)]
+    _check_invariants(algo, n, seed)
+
+
+@pytest.mark.parametrize("algo", sorted(SCHEDULES))
+def test_schedule_invariants_exhaustive_small(algo):
+    for n in _VALID_NS[algo]:
+        _check_invariants(algo, n, seed=n)
+
+
+# -- validation regressions (satellite: no bare asserts on bad n) ----------
+
+@pytest.mark.parametrize("n", [3, 6, 12])
+def test_halving_doubling_rejects_non_power_of_two(n):
+    with pytest.raises(ValueError, match="power-of-two"):
+        halving_doubling_allreduce(np.arange(n), SIZE)
+
+
+@pytest.mark.parametrize("n", [3, 6, 12])
+def test_recursive_doubling_rejects_non_power_of_two(n):
+    with pytest.raises(ValueError, match="power-of-two"):
+        recursive_doubling_all_gather(np.arange(n), SIZE)
+
+
+@pytest.mark.parametrize("n,base", [(6, 4), (12, 4), (10, 2)])
+def test_bcube_rejects_non_power_of_base(n, base):
+    with pytest.raises(ValueError, match="power"):
+        bcube_allreduce(np.arange(n), SIZE, base=base)
+
+
+def test_bcube_rejects_degenerate_base():
+    with pytest.raises(ValueError, match="base"):
+        bcube_allreduce(np.arange(4), SIZE, base=1)
+
+
+def test_valid_sizes_still_build():
+    assert halving_doubling_allreduce(np.arange(8), SIZE)
+    assert bcube_allreduce(np.arange(16), SIZE, base=4)
+    assert bcube_allreduce(np.arange(8), SIZE, base=2)
+    assert recursive_doubling_all_gather(np.arange(8), SIZE)
