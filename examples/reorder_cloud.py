@@ -1,89 +1,82 @@
-"""Dynamic cloud adaptation demo (paper §VI end-to-end).
+"""Dynamic cloud adaptation demo (paper §VI) through the Session.
 
 Simulates a long-running job on a multi-tenant fabric whose link costs
-drift over time (noisy neighbors come and go).  Shows:
+drift over time (noisy neighbors come and go).  The Session owns the
+whole loop:
 
-1. initial probe + solve (the static paper pipeline);
-2. online monitoring via the AdaptiveReranker: when a link on the ring's
-   critical path degrades, the bottleneck-replacement heuristic repairs
-   the order without a full re-solve;
+1. initial attach + plan (the static paper pipeline);
+2. online monitoring via ``session.observe``: each refreshed cost
+   matrix feeds the per-entry AdaptiveRerankers; when an entry on the
+   plan's critical path degrades past the drift threshold it is
+   hot-patched (bottleneck replacement) and the session re-plans;
 3. straggler detection feeding the same machinery;
-4. the cost trajectory with vs without adaptation.
+4. lifecycle hooks logging every drift/replan event.
 
-Run:  PYTHONPATH=src python examples/reorder_cloud.py
+Run:  python examples/reorder_cloud.py
 """
 
 import numpy as np
 
-from repro.core import (
-    AdaptiveReranker,
-    StragglerDetector,
-    cost_matrix,
-    make_cost_model,
-    make_datacenter,
-    optimize_rank_order,
-    probe_fabric,
-    scramble,
-)
+from repro import Session, SessionConfig
+from repro.core import StragglerDetector
+
+N = 48
 
 
 def main() -> None:
     rng = np.random.default_rng(0)
-    fabric, _ = scramble(make_datacenter(48, seed=3), seed=4)
-    c0 = cost_matrix(probe_fabric(fabric, seed=5))
+    cfg = SessionConfig.from_dict({
+        "fabric": {"kind": "datacenter", "nodes": N, "seed": 3,
+                   "scramble_seed": 4},
+        "probe": {"seed": 5},
+        "drift": {"threshold": 1.15, "auto_replan": True},
+        "payload_bytes": 0,          # latency-centric, like the paper
+    })
 
-    res = optimize_rank_order(c0, "ring", method="auto", iters=1200)
-    print(f"initial solve: ring cost {res.cost * 1e3:.3f} ms "
-          f"(stage trace: {[t[0] for t in res.trace[-3:]]})")
+    events = []
+    with Session(cfg) as s:
+        s.on("drift", lambda sess, report:
+             events.append(("drift", len(report.degraded))))
+        s.on("replan", lambda sess, plan, previous:
+             events.append(("replan", plan.fingerprint.digest)))
+        plan = s.plan()
+        print(f"initial plan {plan.fingerprint.digest}: "
+              f"{len(plan.entries)} entries")
 
-    reranker = AdaptiveReranker(
-        model_factory=lambda cm: make_cost_model("ring", cm, 0.0),
-        perm=res.perm, threshold=1.15)
-    detector = StragglerDetector(48, ratio_threshold=1.6)
+        c0 = s.reference_matrix()
+        detector = StragglerDetector(N, ratio_threshold=1.6)
+        stale_epochs = []
+        for epoch in range(30):
+            # drifting multi-tenant load: random links degrade / recover
+            c = c0 * (1.0 + 0.05 * rng.standard_normal((N, N)))
+            c = np.maximum(c, c.T)
+            np.fill_diagonal(c, 0.0)
+            if epoch == 10:
+                # a noisy neighbor lands on a link of the current a-r ring
+                entry = next(iter(s.planned.entries.values()))
+                a, b = entry.perm[0], entry.perm[1]
+                c[a, b] = c[b, a] = c.max() * 20
+                print(f"epoch {epoch}: injected congestion on link ({a},{b})")
+            if epoch == 20:
+                # a straggling host: slow at the *compute* level
+                for _ in range(5):
+                    detector.observe(7, 4.0)
+                for n in range(N):
+                    if n != 7:
+                        detector.observe(n, 1.0)
+                c = detector.inflate(c)
+                print(f"epoch {epoch}: straggler detected at nodes "
+                      f"{detector.stragglers().tolist()}")
 
-    static_costs, adaptive_costs, events = [], [], []
-    c = c0.copy()
-    model0 = make_cost_model("ring", c0, 0.0)
+            report = s.observe(c)
+            if report.stale:
+                stale_epochs.append(epoch)
 
-    for epoch in range(30):
-        # drifting multi-tenant load: random links degrade / recover
-        c = c0 * (1.0 + 0.05 * rng.standard_normal((48, 48)))
-        c = np.maximum(c, c.T)
-        np.fill_diagonal(c, 0.0)
-        if epoch == 10:
-            # a noisy neighbor lands on a link of the *current* ring
-            m = make_cost_model("ring", c, 0.0)
-            a, b, _ = max(m.critical_edges(reranker.perm), key=lambda t: t[2])
-            c[a, b] = c[b, a] = c.max() * 20
-            print(f"epoch {epoch}: injected congestion on link ({a},{b})")
-        if epoch == 20:
-            # a straggling host: slow at the *compute* level
-            for _ in range(5):
-                detector.observe(7, 4.0)
-            for n in range(48):
-                if n != 7:
-                    detector.observe(n, 1.0)
-            c = detector.inflate(c)
-            print(f"epoch {epoch}: straggler detected at nodes "
-                  f"{detector.stragglers().tolist()}")
-
-        m = make_cost_model("ring", c, 0.0)
-        static_costs.append(m.cost(res.perm))          # never adapts
-        _, changed = reranker.update(c)
-        adaptive_costs.append(m.cost(reranker.perm))
-        if changed:
-            events.append(epoch)
-
-    static = np.asarray(static_costs) * 1e3
-    adapt = np.asarray(adaptive_costs) * 1e3
-    print(f"\nre-rank events at epochs: {events}")
-    print(f"mean ring cost:  static order {static.mean():.3f} ms | "
-          f"adaptive {adapt.mean():.3f} ms "
-          f"({static.mean() / adapt.mean():.2f}x better)")
-    print(f"worst epoch:     static {static.max():.3f} ms | "
-          f"adaptive {adapt.max():.3f} ms "
-          f"({static.max() / adapt.max():.2f}x better)")
-    assert adapt.mean() <= static.mean() * 1.001
+    print(f"\ndrift detected at epochs: {stale_epochs}")
+    print(f"lifecycle events: {events}")
+    assert stale_epochs, "the injected congestion must trigger drift"
+    assert any(e[0] == "replan" for e in events), \
+        "auto_replan must recompile after drift"
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
-"""Serving example: batched generation with KV/state caches.
+"""Serving example: batched generation with a Session-compiled plan.
 
 Loads a smoke-scale model per --arch (any of the 10 assigned, including
-the SSM/hybrid state-cache families), runs a prefill wave + greedy decode,
-and reports tokens/s.
+the SSM/hybrid state-cache families), compiles the decode-path
+collective plan through a Session, runs a prefill wave + greedy decode,
+and reports tokens/s plus the plan's per-op hints.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b
+Run:  python examples/serve_lm.py --arch rwkv6-1.6b
 """
 
 import argparse
@@ -13,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import Session, SessionConfig
 from repro.configs import get_config
 from repro.models import get_model
 from repro.serve import GenerationConfig, GenerationEngine
@@ -36,16 +38,26 @@ def main() -> None:
     if cfg.family == "encdec":
         fe = jnp.ones((args.batch, cfg.n_audio_ctx, cfg.d_model), jnp.float32)
 
-    eng = GenerationEngine(
-        model, params, GenerationConfig(max_new_tokens=args.max_new,
-                                        eos_token=-1, temperature=0.0))
-    prompts = [
-        [(7 * i + j) % cfg.vocab_size for j in range(args.prompt_len)]
-        for i in range(args.batch)
-    ]
-    t0 = time.perf_counter()
-    outs = eng.generate(prompts, frontend_embeds=fe)
-    dt = time.perf_counter() - t0
+    session = Session(SessionConfig.from_dict({
+        "fabric": {"kind": "datacenter", "nodes": 16, "scramble_seed": 1},
+        "solver": {"budget": {"iters": 200, "chains": 4}},
+        "workload": "serve",
+        "payload_bytes": 1e6,
+        "moe": bool(cfg.n_experts),
+    }))
+    with session:
+        eng = GenerationEngine(
+            model, params, GenerationConfig(max_new_tokens=args.max_new,
+                                            eos_token=-1, temperature=0.0),
+            session=session)
+        print(f"plan hints: {eng.collective_hints(1e6)}")
+        prompts = [
+            [(7 * i + j) % cfg.vocab_size for j in range(args.prompt_len)]
+            for i in range(args.batch)
+        ]
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, frontend_embeds=fe)
+        dt = time.perf_counter() - t0
     total_new = sum(len(o) for o in outs)
     print(f"arch={cfg.name} ({cfg.family}) batch={args.batch}")
     for i, o in enumerate(outs[:2]):

@@ -1,9 +1,10 @@
 """End-to-end driver: train a ~100M-param qwen2-family model for a few
 hundred steps on synthetic data with the full production stack —
-cloud-aware reordered mesh plan, AdamW + ZeRO specs, async checkpoints,
-straggler-fed dynamic re-ranking, and (injectable) failure recovery.
+Session-planned cloud-aware mesh, AdamW + ZeRO specs, async checkpoints,
+straggler-fed drift observations flowing back into the Session, and
+(injectable) failure recovery that re-plans through the same Session.
 
-Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch qwen2-0.5b]
+Run:  python examples/train_lm.py [--steps 300] [--arch qwen2-0.5b]
 
 On this CPU container the model is width-reduced to ~waist size so a few
 hundred steps finish in minutes; on a TPU fleet drop --reduce.
@@ -13,8 +14,8 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
 
+from repro import Session, SessionConfig
 from repro.configs import get_config
 from repro.core import make_datacenter
 from repro.data import SyntheticLM, host_batch
@@ -65,9 +66,16 @@ def main() -> None:
             yield host_batch(ds, i)
             i += 1
 
+    # One Session owns probing, plan compilation + caching, and drift
+    # re-plans for the cluster; the ClusterView consumes it.
+    session = Session(SessionConfig.from_dict({
+        "solver": {"budget": {"iters": 400, "chains": 4}},
+        "payload_bytes": 4e6,
+    }))
     cluster = ClusterView(
         fabric=make_datacenter(64, seed=0),
-        mesh_shape=(8, 8), axis_names=("data", "model"))
+        mesh_shape=(8, 8), axis_names=("data", "model"),
+        session=session)
 
     injector = None
     if args.inject_failure:
@@ -79,12 +87,13 @@ def main() -> None:
                 return [5, 9]
             return None
 
-    trainer = Trainer(
-        step_fn=step_fn, state=state, batches=batches(),
-        cfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
-                          ckpt_dir=args.ckpt_dir, log_every=20),
-        cluster=cluster, failure_injector=injector)
-    report = trainer.run()
+    with session:
+        trainer = Trainer(
+            step_fn=step_fn, state=state, batches=batches(),
+            cfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                              ckpt_dir=args.ckpt_dir, log_every=20),
+            cluster=cluster, failure_injector=injector)
+        report = trainer.run()
 
     first = report["history"][0]["loss"]
     last = report["history"][-1]["loss"]

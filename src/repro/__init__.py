@@ -1,0 +1,116 @@
+"""Cloud Collectives reproduction, grown into a production-shaped system.
+
+The one-call entry point is the Session facade::
+
+    from repro import Session, SessionConfig
+
+    with Session(SessionConfig.from_dict({
+            "fabric": {"kind": "datacenter", "nodes": 64},
+            "mesh": {"shape": "8x8"}})) as s:
+        applied = s.apply()          # probe -> plan -> apply in one chain
+
+From a shell, the same lifecycle is ``python -m repro {probe,plan,train,
+serve,bench}`` (or the ``repro`` console script after ``pip install -e .``).
+
+Exports are lazy: importing :mod:`repro` never pulls in jax or numpy;
+the first attribute access resolves against the owning submodule.
+"""
+
+from importlib import import_module
+from typing import TYPE_CHECKING
+
+__version__ = "0.3.0"
+
+#: public name -> owning module (resolved lazily on first access)
+_EXPORTS = {
+    # session facade
+    "Session": "repro.session",
+    "SessionConfig": "repro.session",
+    "SessionError": "repro.session",
+    "AppliedPlan": "repro.session",
+    "FabricConfig": "repro.session",
+    "ProbeConfig": "repro.session",
+    "SolverConfig": "repro.session",
+    "CacheConfig": "repro.session",
+    "DriftConfig": "repro.session",
+    "MeshConfig": "repro.session",
+    "train_mix": "repro.session",
+    "serve_mix": "repro.session",
+    # plan subsystem
+    "CollectiveRequest": "repro.plan",
+    "JobMix": "repro.plan",
+    "Plan": "repro.plan",
+    "PlanEntry": "repro.plan",
+    "PlanCompiler": "repro.plan",
+    "PlanCache": "repro.plan",
+    "PlanningService": "repro.plan",
+    "SolveBudget": "repro.plan",
+    "DriftMonitor": "repro.plan",
+    "fabric_fingerprint": "repro.plan",
+    # core pipeline
+    "Fabric": "repro.core",
+    "make_datacenter": "repro.core",
+    "make_tpu_fleet": "repro.core",
+    "scramble": "repro.core",
+    "ProbeResult": "repro.core",
+    "probe_fabric": "repro.core",
+    "cost_matrix": "repro.core",
+    "optimize_rank_order": "repro.core",
+    "optimize_mesh_assignment": "repro.core",
+    "MeshPlan": "repro.core",
+}
+
+__all__ = sorted(_EXPORTS) + ["__version__"]
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from repro.core import (  # noqa: F401
+        Fabric,
+        MeshPlan,
+        ProbeResult,
+        cost_matrix,
+        make_datacenter,
+        make_tpu_fleet,
+        optimize_mesh_assignment,
+        optimize_rank_order,
+        probe_fabric,
+        scramble,
+    )
+    from repro.plan import (  # noqa: F401
+        CollectiveRequest,
+        DriftMonitor,
+        JobMix,
+        Plan,
+        PlanCache,
+        PlanCompiler,
+        PlanEntry,
+        PlanningService,
+        SolveBudget,
+        fabric_fingerprint,
+    )
+    from repro.session import (  # noqa: F401
+        AppliedPlan,
+        CacheConfig,
+        DriftConfig,
+        FabricConfig,
+        MeshConfig,
+        ProbeConfig,
+        Session,
+        SessionConfig,
+        SessionError,
+        SolverConfig,
+        serve_mix,
+        train_mix,
+    )
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    value = getattr(import_module(module), name)
+    globals()[name] = value            # cache for subsequent accesses
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

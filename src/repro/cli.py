@@ -1,0 +1,472 @@
+"""The single ``python -m repro`` command-line interface.
+
+One argparse tree, five subcommands, all round-tripping
+:class:`repro.session.SessionConfig`::
+
+    python -m repro probe --fabric datacenter --nodes 64
+    python -m repro plan  --mesh 8x8 --dry-run
+    python -m repro train --arch qwen2-0.5b --mesh 1x1 --steps 20
+    python -m repro serve --arch qwen2-0.5b --max-new 16
+    python -m repro bench --smoke
+
+Every subcommand accepts ``--config session.json`` plus ``REPRO_*``
+environment overrides (see :meth:`SessionConfig.from_env`) plus explicit
+flags, in that precedence order; ``--dump-config`` prints the resolved
+config as JSON and exits, so a flag-built config can be saved and
+re-fed via ``--config`` unchanged.
+
+The old ``python -m repro.launch.train`` / ``repro.launch.serve`` entry
+points remain as deprecation shims that delegate here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+__all__ = ["main", "build_parser", "session_config_from_args"]
+
+
+# ---------------------------------------------------------------------------
+# shared session arguments
+# ---------------------------------------------------------------------------
+
+def _add_session_args(ap: argparse.ArgumentParser) -> None:
+    g = ap.add_argument_group("session config")
+    g.add_argument("--config", default=None, metavar="JSON",
+                   help="SessionConfig JSON file to start from")
+    g.add_argument("--fabric", default=None,
+                   choices=["datacenter", "tpu-fleet", "live"])
+    g.add_argument("--nodes", type=int, default=None,
+                   help="datacenter fabric size")
+    g.add_argument("--pods", type=int, default=None,
+                   help="tpu-fleet pod count")
+    g.add_argument("--pod-shape", default=None, metavar="AxB")
+    g.add_argument("--scramble-seed", type=int, default=None,
+                   help="relabel nodes (the cloud's random IP list)")
+    g.add_argument("--fabric-seed", type=int, default=None)
+    g.add_argument("--probe-seed", type=int, default=None)
+    g.add_argument("--mesh", default=None, metavar="AxB[xC]",
+                   help="N-D mesh shape, e.g. 8x8 or 2x16x16")
+    g.add_argument("--axes", default=None, metavar="a,b",
+                   help="mesh axis names, e.g. data,model")
+    g.add_argument("--payload-bytes", type=float, default=None)
+    g.add_argument("--moe", action="store_true", default=None,
+                   help="add the EP all-to-all to the default mix")
+    g.add_argument("--plan-cache-dir", default=None,
+                   help="persist compiled plans across launches")
+    g.add_argument("--iters", type=int, default=None,
+                   help="solver SA iterations per entry")
+    g.add_argument("--chains", type=int, default=None)
+    g.add_argument("--solver-engine", default=None,
+                   choices=["vectorized", "reference"])
+    g.add_argument("--solver-backend", default=None,
+                   choices=["numpy", "jax"])
+    g.add_argument("--solver-seed", type=int, default=None)
+    g.add_argument("--drift-threshold", type=float, default=None)
+    g.add_argument("--dump-config", action="store_true",
+                   help="print the resolved SessionConfig JSON and exit")
+
+
+def session_config_from_args(args: argparse.Namespace,
+                             workload: Optional[str] = None):
+    """Resolve file -> environment -> explicit flags into a SessionConfig."""
+    from repro.session import SessionConfig
+
+    base = SessionConfig.load(args.config) if args.config else SessionConfig()
+    cfg = SessionConfig.from_env(base=base)
+
+    updates: Dict[str, Any] = {}
+    fabric: Dict[str, Any] = {}
+    if args.fabric is not None:
+        fabric["kind"] = args.fabric
+    if args.nodes is not None:
+        fabric["nodes"] = args.nodes
+    if args.pods is not None:
+        fabric["n_pods"] = args.pods
+    if getattr(args, "pod_shape", None) is not None:
+        fabric["pod_shape"] = args.pod_shape
+    if args.scramble_seed is not None:
+        fabric["scramble_seed"] = args.scramble_seed
+    if args.fabric_seed is not None:
+        fabric["seed"] = args.fabric_seed
+    if fabric:
+        updates["fabric"] = fabric
+    if args.probe_seed is not None:
+        updates["probe"] = {"seed": args.probe_seed}
+    mesh: Dict[str, Any] = {}
+    if args.mesh is not None:
+        mesh["shape"] = args.mesh
+    if args.axes is not None:
+        mesh["axis_names"] = args.axes
+    if mesh:
+        updates["mesh"] = mesh
+    solver: Dict[str, Any] = {}
+    budget: Dict[str, Any] = {}
+    if args.iters is not None:
+        budget["iters"] = args.iters
+    if args.chains is not None:
+        budget["chains"] = args.chains
+    if args.solver_engine is not None:
+        budget["engine"] = args.solver_engine
+    if args.solver_backend is not None:
+        budget["backend"] = args.solver_backend
+    if budget:
+        solver["budget"] = budget
+    if args.solver_seed is not None:
+        solver["seed"] = args.solver_seed
+    if solver:
+        updates["solver"] = solver
+    if args.plan_cache_dir is not None:
+        updates["cache"] = {"dir": args.plan_cache_dir}
+    if args.drift_threshold is not None:
+        updates["drift"] = {"threshold": args.drift_threshold}
+    if args.payload_bytes is not None:
+        updates["payload_bytes"] = args.payload_bytes
+    if args.moe:
+        updates["moe"] = True
+    if workload is not None:
+        updates["workload"] = workload
+    return cfg.replace(**updates) if updates else cfg
+
+
+def _maybe_dump(args: argparse.Namespace, cfg) -> bool:
+    if getattr(args, "dump_config", False):
+        print(cfg.to_json())
+        return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# probe
+# ---------------------------------------------------------------------------
+
+def cmd_probe(args: argparse.Namespace) -> int:
+    import numpy as np
+
+    from repro.session import Session
+
+    cfg = session_config_from_args(args)
+    if _maybe_dump(args, cfg):
+        return 0
+    with Session(cfg) as s:
+        s.attach()
+        probe = s.probe
+        lat = probe.lat
+        off = lat[~np.eye(lat.shape[0], dtype=bool)] if lat.shape[0] > 1 \
+            else np.zeros(1)
+        print(f"[probe] fabric={cfg.fabric.kind} n={probe.n} "
+              f"lat p10={np.percentile(off, 10) * 1e6:.1f}us "
+              f"p50={np.percentile(off, 50) * 1e6:.1f}us "
+              f"p90={np.percentile(off, 90) * 1e6:.1f}us "
+              f"bw={'probed' if probe.bw is not None else 'n/a'}")
+        if args.out:
+            payload = {
+                "n": probe.n,
+                "lat": probe.lat.tolist(),
+                "bw": None if probe.bw is None else
+                      np.where(np.isfinite(probe.bw), probe.bw, -1.0).tolist(),
+                "n_probes": probe.n_probes,
+                "percentile": probe.percentile,
+            }
+            with open(args.out, "w") as f:
+                json.dump(payload, f)
+            print(f"[probe] wrote {args.out}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+def cmd_plan(args: argparse.Namespace) -> int:
+    from repro.session import Session
+
+    cfg = session_config_from_args(args)
+    if args.dry_run:
+        # a dry run must leave no trace: no persistent cache writes
+        cfg = cfg.replace(cache={"dir": None})
+    if _maybe_dump(args, cfg):
+        return 0
+    with Session(cfg) as s:
+        plan = s.plan()
+        hit = "cache hit" if s.service.stats["cache_hits"] else \
+            f"compiled in {plan.compile_seconds:.2f}s"
+        mode = "dry-run: " if args.dry_run else ""
+        print(f"[plan] {mode}{plan.fingerprint.digest} ({hit}) "
+              f"mix={cfg.workload} n={plan.n}")
+        for (op, bucket, group), e in sorted(plan.entries.items()):
+            print(f"  {op:<15} bucket=2^{bucket:<3} group={len(group):>4} "
+                  f"-> {e.algo:<20} chunks={e.chunks} "
+                  f"t={e.expected_time * 1e3:.3f}ms "
+                  f"({e.best_identity_time / max(e.expected_time, 1e-30):.2f}x "
+                  f"vs identity)")
+        if plan.mesh_plan is not None:
+            mp = plan.mesh_plan
+            print(f"  mesh {'x'.join(map(str, mp.assignment.shape))} "
+                  f"cost {mp.baseline_cost:.5f} -> {mp.cost:.5f} "
+                  f"({mp.baseline_cost / max(mp.cost, 1e-30):.2f}x)")
+        if args.out:
+            # an explicit --out is a user-requested artifact, written
+            # even under --dry-run (which only skips the plan *store*)
+            with open(args.out, "w") as f:
+                f.write(plan.to_json())
+            print(f"[plan] wrote {args.out}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def cmd_train(args: argparse.Namespace) -> int:
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import SyntheticLM, host_batch
+    from repro.launch.mesh import mesh_context
+    from repro.launch.specs import configure_sp
+    from repro.launch.train import build_mesh
+    from repro.models import get_model
+    from repro.optim import AdamWConfig, cosine_schedule
+    from repro.train import Trainer, TrainerConfig, init_state, make_train_step
+
+    cfg = session_config_from_args(args, workload="train")
+    if _maybe_dump(args, cfg):
+        return 0
+
+    arch = get_config(args.arch)
+    if args.smoke:
+        arch = _dc.replace(arch.smoke(), vocab_size=2048)
+    model = get_model(arch)
+    mesh, plan = build_mesh(args, len(jax.devices()),
+                            moe=bool(arch.n_experts), session_config=cfg)
+    configure_sp(arch, mesh, plan=plan)   # SP/EP contexts + planned a2a ring
+
+    state = init_state(model, jax.random.PRNGKey(0))
+    opt = AdamWConfig(schedule=cosine_schedule(args.lr, 10, args.steps))
+    step_fn = jax.jit(make_train_step(model, opt))
+    ds = SyntheticLM(arch.vocab_size, args.seq, args.batch, seed=0)
+
+    def batches():
+        i = 0
+        while True:
+            yield host_batch(ds, i)
+            i += 1
+
+    with mesh_context(mesh):
+        trainer = Trainer(
+            step_fn=step_fn, state=state, batches=batches(),
+            cfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                              ckpt_dir=args.ckpt_dir, log_every=20))
+        report = trainer.run()
+    h = report["history"]
+    print(f"[train] arch={arch.name} steps={report['final_step']} "
+          f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def cmd_serve(args: argparse.Namespace) -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.mesh import mesh_context
+    from repro.launch.specs import configure_sp
+    from repro.launch.train import build_mesh
+    from repro.models import get_model
+    from repro.serve import GenerationConfig, GenerationEngine
+    from repro.session import serve_mix
+
+    cfg = session_config_from_args(args, workload="serve")
+    # decode payloads are smaller than gradient payloads: keep the old
+    # serve launcher's 1e6 default unless the payload was set explicitly
+    # (flag, config file, or environment)
+    import os
+
+    if args.payload_bytes is None and args.config is None \
+            and "REPRO_PAYLOAD_BYTES" not in os.environ:
+        cfg = cfg.replace(payload_bytes=1e6)
+    if _maybe_dump(args, cfg):
+        return 0
+
+    arch = get_config(args.arch)
+    if args.smoke:
+        arch = arch.smoke()
+    model = get_model(arch)
+    mix = serve_mix(cfg.payload_bytes, moe=bool(arch.n_experts))
+    mesh, plan = build_mesh(args, len(jax.devices()), mix=mix,
+                            session_config=cfg)
+    configure_sp(arch, mesh, plan=plan)
+
+    params = model.init(jax.random.PRNGKey(0))
+    fe = None
+    if arch.family == "vlm":
+        fe = jnp.ones((args.batch, arch.n_img_tokens, arch.d_model),
+                      jnp.float32)
+    if arch.family == "encdec":
+        fe = jnp.ones((args.batch, arch.n_audio_ctx, arch.d_model),
+                      jnp.float32)
+
+    prompts = [
+        [(11 * i + j) % arch.vocab_size for j in range(args.prompt_len)]
+        for i in range(args.batch)
+    ]
+    with mesh_context(mesh):
+        eng = GenerationEngine(
+            model, params,
+            GenerationConfig(max_new_tokens=args.max_new, eos_token=-1),
+            plan=plan)
+        if plan is not None:
+            print(f"[serve] plan {plan.fingerprint.digest} hints: "
+                  f"{eng.collective_hints(cfg.payload_bytes)}")
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, frontend_embeds=fe)
+        dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    print(f"[serve] arch={arch.name} {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# bench
+# ---------------------------------------------------------------------------
+
+def cmd_bench(args: argparse.Namespace) -> int:
+    """Self-contained plan-pipeline benchmark (CI smoke + local sanity).
+
+    Times, per fabric size: cold compile, warm cache hit, and the plan's
+    expected speedup over the identity order — through the same Session
+    facade applications use.
+    """
+    from repro.session import Session
+
+    sizes = [16] if args.smoke else [32, 64]
+    iters = 200 if args.smoke else 800
+    results: List[Dict[str, Any]] = []
+    for n in sizes:
+        cfg = session_config_from_args(args)
+        cfg = cfg.replace(
+            fabric={"kind": "datacenter", "nodes": n, "scramble_seed": 1},
+            mesh={"shape": ()},
+            cache={"dir": None},
+            solver={"budget": {"iters": iters, "chains": 4}})
+        with Session(cfg) as s:
+            t0 = time.perf_counter()
+            plan = s.plan()
+            cold_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            s.service.request(s.probe, s.mix)        # warm: LRU probe
+            warm_s = time.perf_counter() - t0
+            speedups = [
+                e.best_identity_time / max(e.expected_time, 1e-30)
+                for e in plan.entries.values()
+            ]
+            row = {
+                "n": n,
+                "entries": len(plan.entries),
+                "cold_compile_s": round(cold_s, 4),
+                "warm_hit_s": round(warm_s, 6),
+                "warm_speedup_x": round(cold_s / max(warm_s, 1e-9), 1),
+                "mean_speedup_vs_identity":
+                    round(sum(speedups) / len(speedups), 3),
+                "cache_hits": s.service.stats["cache_hits"],
+            }
+        results.append(row)
+        print(f"bench,n={n},{row['cold_compile_s'] * 1e6:.0f},"
+              f"warm_x={row['warm_speedup_x']}")
+    payload = {"bench": "session_plan", "smoke": bool(args.smoke),
+               "results": results}
+    print(json.dumps(payload, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {args.out}")
+    for row in results:
+        if row["cache_hits"] < 1:
+            print("[bench] FAIL: warm request missed the plan cache")
+            return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="Cloud Collectives: probe, plan, train, serve, bench")
+    from repro import __version__
+
+    ap.add_argument("--version", action="version",
+                    version=f"repro {__version__}")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("probe", help="probe a fabric, print/export the result")
+    _add_session_args(p)
+    p.add_argument("--out", default=None, help="write probe JSON here")
+    p.set_defaults(fn=cmd_probe)
+
+    p = sub.add_parser("plan", help="compile (or fetch) a collective plan")
+    _add_session_args(p)
+    p.add_argument("--dry-run", action="store_true",
+                   help="compile + report without touching the plan store")
+    p.add_argument("--out", default=None, help="write the plan JSON here")
+    p.set_defaults(fn=cmd_plan)
+
+    p = sub.add_parser("train", help="train on a planned (reordered) mesh")
+    _add_session_args(p)
+    p.add_argument("--arch", default="qwen2-0.5b")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--reorder", choices=["none", "simulate", "probe"],
+                   default="simulate")
+    p.add_argument("--smoke", action="store_true", default=True,
+                   help="reduced config (CPU); drop on a real fleet")
+    p.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.set_defaults(fn=cmd_train, mesh_default="1x1")
+
+    p = sub.add_parser("serve", help="batched generation on a planned mesh")
+    _add_session_args(p)
+    p.add_argument("--arch", default="qwen2-0.5b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--max-new", type=int, default=32)
+    p.add_argument("--reorder", choices=["none", "simulate", "probe"],
+                   default="simulate")
+    p.add_argument("--smoke", action="store_true", default=True)
+    p.set_defaults(fn=cmd_serve, mesh_default="1x1")
+
+    p = sub.add_parser("bench", help="session/plan pipeline benchmark")
+    _add_session_args(p)
+    p.add_argument("--smoke", action="store_true",
+                   help="one small fabric (CI)")
+    p.add_argument("--out", default=None, help="write bench JSON here")
+    p.set_defaults(fn=cmd_bench)
+
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    # train/serve build meshes: give --mesh a launcher default of 1x1
+    if getattr(args, "mesh", None) is None and hasattr(args, "mesh_default"):
+        args.mesh = args.mesh_default
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,10 @@
 """Cloud Collectives core: cost models, probing, solving, mesh reordering.
 
-The paper's pipeline, end to end::
+Most applications should use the :class:`repro.session.Session` facade
+(or ``python -m repro``), which drives this whole pipeline — attach →
+plan → apply → monitor — behind one declarative config.  The manual
+steps below remain supported for the paper mapping
+(examples/manual_pipeline.py)::
 
     fabric  = topology.make_tpu_fleet(...)        # or a live cluster
     probed  = probe.probe_fabric(fabric)          # §IV-B pairwise probing

@@ -82,7 +82,22 @@ def probe_fabric(
 
 
 def cost_matrix(probe: ProbeResult, size_bytes: float = 0.0) -> np.ndarray:
-    """c_{i,j}(S) = lat + S/bw (S=0 recovers the paper's latency-only c)."""
+    """c_{i,j}(S) = lat + S/bw (S=0 recovers the paper's latency-only c).
+
+    Raises :class:`ValueError` when the probe is empty or malformed —
+    an unprobed fabric must fail here with a usable message, not as a
+    numpy shape error inside the solver.
+    """
+    lat = np.asarray(probe.lat)
+    if lat.size == 0:
+        raise ValueError(
+            "cost_matrix got an empty ProbeResult (0 nodes); probe the "
+            "fabric first (probe_fabric / probe_mesh_pairwise) or attach "
+            "a non-empty fabric")
+    if lat.ndim != 2 or lat.shape[0] != lat.shape[1]:
+        raise ValueError(
+            f"cost_matrix needs a square [n, n] latency matrix; got shape "
+            f"{lat.shape}")
     c = probe.lat.copy()
     if size_bytes and probe.bw is not None:
         with np.errstate(divide="ignore"):

@@ -71,8 +71,25 @@ class Fabric:
         return np.maximum(c, c.T)
 
     def subset(self, nodes: Sequence[int]) -> "Fabric":
-        """Fabric restricted to ``nodes`` (elastic restart after failure)."""
-        nodes = list(nodes)
+        """Fabric restricted to ``nodes`` (elastic restart after failure).
+
+        Raises :class:`ValueError` on empty, out-of-range, or duplicate
+        node ids — a wrong survivor list must fail loudly here, not as a
+        numpy index error deep inside a solver.
+        """
+        nodes = [int(x) for x in nodes]
+        if not nodes:
+            raise ValueError(
+                "Fabric.subset needs at least one node; got an empty list")
+        bad = [x for x in nodes if x < 0 or x >= self.n]
+        if bad:
+            raise ValueError(
+                f"Fabric.subset node ids {bad} out of range for a fabric of "
+                f"{self.n} nodes (valid ids: 0..{self.n - 1})")
+        if len(set(nodes)) != len(nodes):
+            dups = sorted({x for x in nodes if nodes.count(x) > 1})
+            raise ValueError(
+                f"Fabric.subset node ids must be unique; duplicates: {dups}")
         idx = np.asarray(nodes)
         paths = [[self.paths[i][j] for j in nodes] for i in nodes]
         return Fabric(

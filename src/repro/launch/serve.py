@@ -1,88 +1,40 @@
-"""Production serving launcher: batched generation on a (reordered) mesh.
+"""Production serving launcher — deprecated shim.
 
-    python -m repro.launch.serve --arch deepseek-v2-236b --mesh 16x16
-    python -m repro.launch.serve --arch rwkv6-1.6b --batch 8 --max-new 64
+The serving entry point moved to the unified CLI::
+
+    python -m repro serve --arch deepseek-v2-236b --mesh 16x16
+    python -m repro serve --arch rwkv6-1.6b --batch 8 --max-new 64
+
+``python -m repro.launch.serve`` still works (delegating there), and
+:func:`serve_job_mix` remains as a deprecated alias of
+:func:`repro.session.serve_mix`.
 """
 
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
+import warnings
 
 
 def serve_job_mix(payload_bytes: float, moe: bool = False):
-    """The decode path's collective histogram: per-layer TP all-gather /
-    reduce-scatter dominate; a small all-reduce syncs sampling state; MoE
-    archs add the EP all-to-all.  (No gradient all-reduce — that is the
-    training mix.)"""
-    from repro.plan import CollectiveRequest, JobMix
+    """Deprecated: use :func:`repro.session.serve_mix`."""
+    warnings.warn(
+        "repro.launch.serve.serve_job_mix is deprecated; use "
+        "repro.session.serve_mix", DeprecationWarning, stacklevel=2)
+    from repro.session import serve_mix
 
-    reqs = [
-        CollectiveRequest("all-gather", payload_bytes, count=2.0),
-        CollectiveRequest("reduce-scatter", payload_bytes, count=2.0),
-        CollectiveRequest("all-reduce", max(payload_bytes / 64, 1.0)),
-    ]
-    if moe:
-        reqs.append(CollectiveRequest("all-to-all", payload_bytes, count=2.0))
-    return JobMix(requests=tuple(reqs), name="serve")
+    return serve_mix(payload_bytes, moe=moe)
 
 
 def main() -> None:
-    from repro.configs import get_config
-    from repro.launch.specs import configure_sp
-    from repro.launch.train import build_mesh
-    from repro.models import get_model
-    from repro.serve import GenerationConfig, GenerationEngine
+    """Deprecated entry point: delegates to ``python -m repro serve``."""
+    import sys
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--mesh", default="1x1")
-    ap.add_argument("--reorder", choices=["none", "simulate", "probe"],
-                    default="simulate")
-    ap.add_argument("--payload-bytes", type=float, default=1e6)
-    ap.add_argument("--smoke", action="store_true", default=True)
-    args = ap.parse_args()
+    warnings.warn(
+        "python -m repro.launch.serve is deprecated; use "
+        "`python -m repro serve`", DeprecationWarning, stacklevel=2)
+    from repro.cli import main as cli_main
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-    model = get_model(cfg)
-    mesh, plan = build_mesh(
-        args, len(jax.devices()),
-        mix=serve_job_mix(args.payload_bytes, moe=bool(cfg.n_experts)))
-    configure_sp(cfg, mesh, plan=plan)   # SP/EP contexts + planned a2a ring
-
-    params = model.init(jax.random.PRNGKey(0))
-    fe = None
-    if cfg.family == "vlm":
-        fe = jnp.ones((args.batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
-    if cfg.family == "encdec":
-        fe = jnp.ones((args.batch, cfg.n_audio_ctx, cfg.d_model), jnp.float32)
-
-    prompts = [
-        [(11 * i + j) % cfg.vocab_size for j in range(args.prompt_len)]
-        for i in range(args.batch)
-    ]
-    with jax.set_mesh(mesh):
-        eng = GenerationEngine(
-            model, params,
-            GenerationConfig(max_new_tokens=args.max_new, eos_token=-1),
-            plan=plan)
-        if plan is not None:
-            print(f"[serve] plan {plan.fingerprint.digest} hints: "
-                  f"{eng.collective_hints(args.payload_bytes)}")
-        t0 = time.perf_counter()
-        outs = eng.generate(prompts, frontend_embeds=fe)
-        dt = time.perf_counter() - t0
-    total = sum(len(o) for o in outs)
-    print(f"[serve] arch={cfg.name} {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s)")
+    raise SystemExit(cli_main(["serve", *sys.argv[1:]]))
 
 
 if __name__ == "__main__":

@@ -1,20 +1,21 @@
-"""Production training launcher.
+"""Production training launcher internals.
 
-On a real fleet::
+The user-facing entry point is::
 
-    python -m repro.launch.train --arch glm4-9b --steps 1000 \
+    python -m repro train --arch glm4-9b --steps 1000 \
         --mesh 16x16 --reorder probe        # probe + solve + reordered mesh
 
-On this CPU container it runs the same code path at smoke scale with a
-simulated fleet (``--reorder simulate``), which is also what the CI-style
-tests exercise.  The paper's technique enters exactly once: the device
-order used to build the Mesh.
+(``python -m repro.launch.train`` remains as a deprecation shim that
+delegates there.)  :func:`build_mesh` is the piece the CLI and tests
+share: it drives a :class:`repro.session.Session` through
+probe → plan → apply and returns the (reordered) mesh plus the compiled
+plan.  The paper's technique enters exactly once: the device order used
+to build the Mesh.
 """
 
 from __future__ import annotations
 
-import argparse
-import dataclasses
+import warnings
 
 import numpy as np
 
@@ -27,131 +28,91 @@ def parse_mesh(s: str):
 
 
 def default_job_mix(payload_bytes: float, moe: bool = False):
-    """The collective histogram of a training step at ``payload_bytes``
-    gradients: the per-step DP reduction plus the per-layer TP pair, and
-    the EP all-to-all when the arch routes experts."""
-    from repro.plan import CollectiveRequest, JobMix
+    """Deprecated: use :func:`repro.session.train_mix`."""
+    warnings.warn(
+        "repro.launch.train.default_job_mix is deprecated; use "
+        "repro.session.train_mix", DeprecationWarning, stacklevel=2)
+    from repro.session import train_mix
 
-    reqs = [
-        CollectiveRequest("all-reduce", payload_bytes),           # gradients
-        CollectiveRequest("all-gather", payload_bytes / 8, count=2.0),
-        CollectiveRequest("reduce-scatter", payload_bytes / 8, count=2.0),
-    ]
-    if moe:
-        reqs.append(CollectiveRequest("all-to-all", payload_bytes / 16,
-                                      count=2.0))
-    return JobMix(requests=tuple(reqs), name="train")
+    return train_mix(payload_bytes, moe=moe)
 
 
-def build_mesh(args, n_devices: int, mix=None, moe: bool = False):
+def build_mesh(args, n_devices: int, mix=None, moe: bool = False,
+               session_config=None):
     """Mesh per --reorder policy: none | simulate | probe.
 
-    ``simulate``/``probe`` go through the :mod:`repro.plan` service: the
-    plan (per-collective algorithm + rank order + the N-D mesh
-    assignment) is compiled once and cached under the fabric
-    fingerprint, so relaunches — and other jobs on the same fabric —
-    skip the solve entirely.  ``mix`` overrides the planned collective
-    histogram (serving passes its decode-shaped mix); the default is
-    :func:`default_job_mix` with ``moe`` adding the EP all-to-all.
+    ``simulate``/``probe`` run the full Session lifecycle: attach (a
+    simulated scrambled TPU fleet, or live pairwise probes), plan (the
+    per-collective algorithm + rank order + the N-D mesh assignment,
+    compiled once and cached under the fabric fingerprint), apply (the
+    reordered Mesh).  ``mix`` overrides the planned collective histogram
+    (serving passes its decode-shaped mix); ``session_config`` supplies
+    cache dir / budget / payload when the caller (the CLI) already
+    resolved a :class:`~repro.session.SessionConfig`.
 
     Returns ``(mesh, plan)`` where plan is a :class:`repro.plan.Plan`
     (or None when reordering is off).
     """
-    from repro.core import (
-        make_tpu_fleet,
-        probe_fabric,
-        probe_mesh_pairwise,
-        scramble,
-    )
-    from repro.launch.mesh import make_mesh_for_tests, make_planned_mesh
-    from repro.plan import PlanCache, PlanCompiler, PlanningService
+    from repro.launch.mesh import make_mesh_for_tests
+    from repro.session import Session, SessionConfig
 
     shape, axes = parse_mesh(args.mesh)
     if args.reorder == "none" or int(np.prod(shape)) != n_devices:
         return make_mesh_for_tests(shape, axes), None
-    fleet = None
+
+    from repro.session.config import FabricConfig
+
+    base = session_config or SessionConfig()
+    pods = shape[0] if len(shape) == 3 else 1
     if args.reorder == "probe":
-        probed = probe_mesh_pairwise()             # live-device probes
+        fabric = {"kind": "live"}
+    elif base.fabric != FabricConfig():
+        fabric = {}          # the user declared a fabric: honor it
     else:                                           # simulate
-        pods = shape[0] if len(shape) == 3 else 1
-        fleet, _ = scramble(
-            make_tpu_fleet(n_pods=max(pods, 1),
-                           pod_shape=(shape[-2], shape[-1])), seed=0)
-        probed = probe_fabric(fleet)
-    service = PlanningService(
-        PlanCompiler(fabric=fleet),
-        PlanCache(store_dir=getattr(args, "plan_cache_dir", None)))
-    try:
-        plan = service.request(
-            probed, mix or default_job_mix(args.payload_bytes, moe=moe),
-            mesh_shape=shape, axis_names=axes)
-    finally:
-        service.close()
+        fabric = {"kind": "tpu-fleet", "n_pods": max(pods, 1),
+                  "pod_shape": (shape[-2], shape[-1]) if len(shape) >= 2
+                  else (shape[-1], 1),
+                  "scramble_seed": 0}
+    cache_dir = getattr(args, "plan_cache_dir", None)
+    payload = getattr(args, "payload_bytes", None)
+    cfg = base.replace(
+        fabric=fabric,
+        mesh={"shape": shape, "axis_names": axes},
+        cache={"dir": cache_dir if cache_dir is not None
+               else base.cache.dir},
+        payload_bytes=payload if payload is not None else base.payload_bytes,
+        moe=moe or base.moe,
+    )
+    with Session(cfg) as session:
+        plan = session.plan(mix=mix)
+        applied = session.apply()
+        hit = "cache hit" if session.service.stats["cache_hits"] else \
+            f"compiled in {plan.compile_seconds:.2f}s"
     mp = plan.mesh_plan
-    hit = "cache hit" if service.stats["cache_hits"] else \
-        f"compiled in {plan.compile_seconds:.2f}s"
     print(f"[launch] plan {plan.fingerprint.digest} ({hit}): "
           f"mesh identity {mp.baseline_cost:.5f} -> optimized {mp.cost:.5f} "
           f"({mp.baseline_cost / max(mp.cost, 1e-30):.2f}x), "
           f"{len(plan.entries)} collective entries")
-    return make_planned_mesh(plan), plan
+    mesh = applied.mesh
+    if mesh is None:
+        warnings.warn(
+            "planned mesh could not be built; training on an "
+            "UNREORDERED mesh (see the session warning above)",
+            RuntimeWarning, stacklevel=2)
+        mesh = make_mesh_for_tests(shape, axes)
+    return mesh, plan
 
 
 def main() -> None:
-    import jax
+    """Deprecated entry point: delegates to ``python -m repro train``."""
+    import sys
 
-    from repro.configs import get_config
-    from repro.data import SyntheticLM, host_batch
-    from repro.models import get_model
-    from repro.optim import AdamWConfig, cosine_schedule
-    from repro.train import Trainer, TrainerConfig, init_state, make_train_step
+    warnings.warn(
+        "python -m repro.launch.train is deprecated; use "
+        "`python -m repro train`", DeprecationWarning, stacklevel=2)
+    from repro.cli import main as cli_main
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--mesh", default="1x1")
-    ap.add_argument("--reorder", choices=["none", "simulate", "probe"],
-                    default="simulate")
-    ap.add_argument("--payload-bytes", type=float, default=4e6)
-    ap.add_argument("--plan-cache-dir", default=None,
-                    help="persist compiled collective plans across launches")
-    ap.add_argument("--smoke", action="store_true", default=True,
-                    help="reduced config (CPU); drop on a real fleet")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
-    ap.add_argument("--lr", type=float, default=1e-3)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = dataclasses.replace(cfg.smoke(), vocab_size=2048)
-    model = get_model(cfg)
-    mesh, plan = build_mesh(args, len(jax.devices()),
-                            moe=bool(cfg.n_experts))
-    from repro.launch.specs import configure_sp
-    configure_sp(cfg, mesh, plan=plan)   # SP/EP contexts + planned a2a ring
-
-    state = init_state(model, jax.random.PRNGKey(0))
-    opt = AdamWConfig(schedule=cosine_schedule(args.lr, 10, args.steps))
-    step_fn = jax.jit(make_train_step(model, opt))
-    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
-
-    def batches():
-        i = 0
-        while True:
-            yield host_batch(ds, i)
-            i += 1
-
-    with jax.set_mesh(mesh):
-        trainer = Trainer(
-            step_fn=step_fn, state=state, batches=batches(),
-            cfg=TrainerConfig(total_steps=args.steps, ckpt_every=50,
-                              ckpt_dir=args.ckpt_dir, log_every=20))
-        report = trainer.run()
-    h = report["history"]
-    print(f"[launch] arch={cfg.name} steps={report['final_step']} "
-          f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
+    raise SystemExit(cli_main(["train", *sys.argv[1:]]))
 
 
 if __name__ == "__main__":

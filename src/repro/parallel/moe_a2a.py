@@ -47,7 +47,7 @@ _EP_STATE: Dict[str, Any] = {"mesh": None, "ep": None, "tp": None, "dp": (),
 
 
 def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model",
-           plan=None):
+           plan=None, session=None):
     """Arm expert parallelism; ``plan`` (a :class:`repro.plan.Plan`) may
     supply the shift-ring order for the EP all-to-all.
 
@@ -55,7 +55,13 @@ def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model",
     equals the EP degree, its solved rank order becomes the order in
     which the shift schedule walks peers (see :func:`_shift_perms`) —
     the runtime consumption of the compiler's ``AllToAllCost`` solve.
+
+    ``session`` (a :class:`repro.session.Session`) supplies its compiled
+    plan when no explicit ``plan`` is passed — the Session-facade way of
+    arming EP without hand-threading the plan object.
     """
+    if plan is None and session is not None:
+        plan = session.planned
     dp = tuple(a for a in ("pod",) if a in mesh.axis_names)
     ep = ep_axis if ep_axis in mesh.axis_names else None
     order = None

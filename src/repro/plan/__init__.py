@@ -1,5 +1,10 @@
 """repro.plan — collective plan compiler, plan cache, planning service.
 
+Most applications should use the :class:`repro.session.Session` facade
+(or ``python -m repro plan``), which owns a PlanningService plus cache
+and wires drift re-plans automatically; the manual pipeline below
+remains the mechanical layer the session drives.
+
 End-to-end::
 
     fabric  = make_tpu_fleet(...)                    # or a live cluster

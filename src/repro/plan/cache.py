@@ -341,6 +341,12 @@ class DriftMonitor:
             rr.update(self._sub(ref, entry))       # seeds reference_cost
             self._rerankers[key] = rr
 
+    def set_threshold(self, threshold: float) -> None:
+        """Adjust drift sensitivity on the live monitor (all rerankers)."""
+        self.threshold = float(threshold)
+        for rr in self._rerankers.values():
+            rr.threshold = float(threshold)
+
     @staticmethod
     def _sub(c: np.ndarray, entry: PlanEntry) -> np.ndarray:
         g = np.asarray(entry.group, dtype=np.int64)

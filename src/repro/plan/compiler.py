@@ -329,6 +329,9 @@ class SolveBudget:
     chunk_candidates: Tuple[int, ...] = (1, 2, 4)
     #: don't bother chunking payloads below this (latency-bound regime)
     min_chunk_bytes: float = 64 * 1024
+    #: forwarded to :func:`repro.core.solver.solve`
+    engine: str = "vectorized"          # "vectorized" | "reference"
+    backend: str = "numpy"              # "numpy" | "jax"
 
 
 class PlanCompiler:
@@ -479,7 +482,9 @@ class PlanCompiler:
         for algo, akw in candidate_algorithms(op, n_g):
             model = self._model(algo, sub_lat, sub_bw, size_bytes, akw)
             solved = solve(model, method="auto", iters=self.budget.iters,
-                           chains=self.budget.chains, seed=self.seed)
+                           chains=self.budget.chains, seed=self.seed,
+                           engine=self.budget.engine,
+                           backend=self.budget.backend)
             for local in (identity_local, np.asarray(solved.perm)):
                 node_perm = g[local]
                 for chunks in chunk_cands:

@@ -45,13 +45,20 @@ def make_serve_step(model) -> Callable:
 
 class GenerationEngine:
     def __init__(self, model, params, gen_cfg: Optional[GenerationConfig] = None,
-                 plan=None):
+                 plan=None, session=None):
         self.model = model
         self.params = params
         self.cfg = gen_cfg or GenerationConfig()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
         self.stats: Dict[str, float] = {"prefill_tokens": 0, "decode_steps": 0}
+        #: a repro.session.Session may own the plan lifecycle for the
+        #: engine: its (lazily compiled) plan is adopted when no explicit
+        #: plan is passed, and re-plans it performs (drift) are visible
+        #: because collective_hints() re-reads session.planned
+        self.session = session
+        if plan is None and session is not None:
+            plan = session.plan() if session.planned is None else session.planned
         #: compiled collective plan (repro.plan.Plan) for the serving mesh;
         #: the engine's TP collectives ride the mesh built from it, and
         #: per-op entries are surfaced for operators via collective_hints()
@@ -66,6 +73,8 @@ class GenerationEngine:
         archs add the EP all-to-all.  Returns {op: entry summary} from
         the plan's nearest size buckets (empty without a plan).
         """
+        if self.session is not None and self.session.planned is not None:
+            self.plan = self.session.planned       # pick up drift re-plans
         if self.plan is None:
             return {}
         out: Dict[str, Dict] = {}

@@ -1,0 +1,27 @@
+"""repro.session — the one-call, non-intrusive Session facade.
+
+Entry point for the whole pipeline::
+
+    from repro import Session, SessionConfig
+
+    with Session(SessionConfig.from_dict({
+            "fabric": {"kind": "datacenter", "nodes": 64},
+            "mesh": {"shape": "8x8"}})) as s:
+        applied = s.apply()            # probe -> plan -> apply, lazily
+        print(applied.summary())
+
+See DESIGN.md §6 for the facade architecture, the lifecycle state
+machine, and the deprecation policy for the older manual pipeline.
+"""
+
+from .config import (  # noqa: F401
+    CacheConfig,
+    DriftConfig,
+    FabricConfig,
+    MeshConfig,
+    ProbeConfig,
+    SessionConfig,
+    SolverConfig,
+)
+from .mixes import default_mix, serve_mix, train_mix  # noqa: F401
+from .session import EVENTS, AppliedPlan, Session, SessionError  # noqa: F401

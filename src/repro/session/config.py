@@ -1,0 +1,329 @@
+"""Unified, declarative session configuration.
+
+Every knob that was previously hand-threaded through ``core`` / ``plan``
+/ ``launch`` call sites lives here as one frozen dataclass tree:
+
+* :class:`FabricConfig` — which fabric to attach (synthetic datacenter /
+  TPU fleet, or live device probing);
+* :class:`ProbeConfig` — paper §IV-B probing parameters;
+* :class:`SolverConfig` — solver seed + :class:`repro.plan.SolveBudget`
+  (iters, chains, chunk candidates, engine, backend);
+* :class:`CacheConfig` — plan-cache directory / capacity / fuzzy-match
+  tolerance;
+* :class:`DriftConfig` — drift threshold and re-plan policy;
+* :class:`MeshConfig` — N-D mesh shape + axis names.
+
+The tree round-trips through plain dicts (:meth:`SessionConfig.to_dict`
+/ :meth:`SessionConfig.from_dict`), JSON files (:meth:`SessionConfig.load`
+/ :meth:`SessionConfig.dump`), and the environment
+(:meth:`SessionConfig.from_env`, ``REPRO_<SECTION>_<FIELD>`` variables),
+so the same declaration drives the Python API, ``python -m repro``, and
+launcher scripts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.plan.cache import DEFAULT_TOL
+from repro.plan.compiler import SolveBudget
+
+__all__ = [
+    "FabricConfig",
+    "ProbeConfig",
+    "SolverConfig",
+    "CacheConfig",
+    "DriftConfig",
+    "MeshConfig",
+    "SessionConfig",
+]
+
+
+def _parse_dims(value: Any) -> Tuple[int, ...]:
+    """Accept (8, 8), [8, 8], "8x8", or "8,8"."""
+    if value is None:
+        return ()
+    if isinstance(value, str):
+        sep = "x" if "x" in value else ","
+        parts = [p for p in value.split(sep) if p.strip()]
+        return tuple(int(p) for p in parts)
+    return tuple(int(v) for v in value)
+
+
+def _parse_names(value: Any) -> Tuple[str, ...]:
+    if value is None:
+        return ()
+    if isinstance(value, str):
+        return tuple(p.strip() for p in value.split(",") if p.strip())
+    return tuple(str(v) for v in value)
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Which fabric a session attaches to when none is passed explicitly."""
+
+    kind: str = "datacenter"           # "datacenter" | "tpu-fleet" | "live"
+    nodes: int = 64                    # datacenter size
+    n_pods: int = 1                    # tpu-fleet pods
+    pod_shape: Tuple[int, ...] = (8, 8)
+    fragmentation: float = 0.0
+    seed: int = 0
+    #: scramble the node labels (the cloud's "random IP list", paper §I);
+    #: None = no scramble
+    scramble_seed: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "pod_shape", _parse_dims(self.pod_shape))
+        if self.kind not in ("datacenter", "tpu-fleet", "live"):
+            raise ValueError(
+                f"FabricConfig.kind must be 'datacenter', 'tpu-fleet', or "
+                f"'live'; got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """Paper §IV-B probing parameters (see :func:`repro.core.probe_fabric`)."""
+
+    n_probes: int = 1000
+    percentile: float = 10.0
+    noise_scale: float = 0.3
+    measure_bw: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Solver engine selection + per-entry effort budget."""
+
+    seed: int = 0
+    budget: SolveBudget = dataclasses.field(default_factory=SolveBudget)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Plan-cache policy (see :class:`repro.plan.PlanCache`)."""
+
+    dir: Optional[str] = None          # None = in-memory only
+    capacity: int = 32
+    tol: float = DEFAULT_TOL           # fuzzy fingerprint-match octaves
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """When an observed cost matrix invalidates the current plan."""
+
+    threshold: float = 1.15            # degradation ratio triggering repair
+    auto_replan: bool = True           # recompile after a stale observation
+    interval_s: float = 5.0            # background monitor poll period
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """N-D mesh the plan's assignment targets; empty = no mesh plan."""
+
+    shape: Tuple[int, ...] = ()
+    axis_names: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", _parse_dims(self.shape))
+        names = _parse_names(self.axis_names)
+        if self.shape and not names:
+            names = ("pod", "data", "model")[-len(self.shape):]
+        object.__setattr__(self, "axis_names", names)
+        if self.shape and len(names) != len(self.shape):
+            raise ValueError(
+                f"MeshConfig needs one axis name per dim: shape {self.shape} "
+                f"vs axis_names {names}")
+
+
+_SECTIONS: Dict[str, type] = {
+    "fabric": FabricConfig,
+    "probe": ProbeConfig,
+    "solver": SolverConfig,
+    "cache": CacheConfig,
+    "drift": DriftConfig,
+    "mesh": MeshConfig,
+}
+
+
+def _coerce(ftype: Any, value: Any) -> Any:
+    """Best-effort string coercion for env/CLI-sourced values."""
+    if not isinstance(value, str):
+        return value
+    s = value.strip()
+    if s.lower() in ("none", "null"):
+        return None
+    if ftype is int:
+        return int(float(s))
+    if ftype is float:
+        return float(s)
+    if ftype is bool:
+        return s.lower() in ("1", "true", "yes", "on")
+    return s
+
+
+def _field_hint(f: dataclasses.Field) -> Optional[type]:
+    """Scalar type of a dataclass field, robust to string annotations."""
+    t = str(f.type).replace("typing.", "")
+    if t in ("int", "Optional[int]"):
+        return int
+    if t in ("float", "Optional[float]"):
+        return float
+    if t == "bool":
+        return bool
+    return None
+
+
+def _dataclass_from_dict(cls: type, d: Mapping[str, Any], path: str) -> Any:
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - set(fields))
+    if unknown:
+        raise ValueError(
+            f"unknown {path} config keys {unknown}; "
+            f"expected a subset of {sorted(fields)}")
+    kwargs: Dict[str, Any] = {}
+    for name, value in d.items():
+        f = fields[name]
+        if name == "budget":
+            kwargs[name] = value if isinstance(value, SolveBudget) else \
+                _dataclass_from_dict(SolveBudget, dict(value), f"{path}.{name}")
+            continue
+        kwargs[name] = _coerce(_field_hint(f), value)
+        if name == "chunk_candidates" and kwargs[name] is not None:
+            kwargs[name] = _parse_dims(kwargs[name])
+    return cls(**kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    """The one declaration a :class:`repro.session.Session` needs.
+
+    Everything defaults to a CPU-runnable synthetic setup; a production
+    launch overrides ``fabric.kind="live"``, the mesh shape, and the
+    cache directory — nothing else has to change.
+    """
+
+    fabric: FabricConfig = dataclasses.field(default_factory=FabricConfig)
+    probe: ProbeConfig = dataclasses.field(default_factory=ProbeConfig)
+    solver: SolverConfig = dataclasses.field(default_factory=SolverConfig)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
+    mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
+    #: dominant collective payload of the workload (bytes)
+    payload_bytes: float = 4e6
+    #: workload shape for the default job mix ("train" | "serve")
+    workload: str = "train"
+    #: MoE workload: adds the EP all-to-all to the default mix
+    moe: bool = False
+    name: str = "session"
+
+    def __post_init__(self):
+        if self.workload not in ("train", "serve"):
+            raise ValueError(
+                f"SessionConfig.workload must be 'train' or 'serve'; "
+                f"got {self.workload!r}")
+
+    # -- dict / JSON round-trip -------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "SessionConfig":
+        d = dict(d)
+        kwargs: Dict[str, Any] = {}
+        for section, cls in _SECTIONS.items():
+            if section in d:
+                value = d.pop(section)
+                kwargs[section] = value if isinstance(value, cls) else \
+                    _dataclass_from_dict(cls, dict(value), section)
+        scalars = {"payload_bytes", "workload", "moe", "name"}
+        unknown = sorted(set(d) - scalars)
+        if unknown:
+            raise ValueError(
+                f"unknown session config keys {unknown}; expected sections "
+                f"{sorted(_SECTIONS)} or scalars {sorted(scalars)}")
+        if "payload_bytes" in d:
+            kwargs["payload_bytes"] = float(d["payload_bytes"])
+        if "moe" in d:
+            kwargs["moe"] = _coerce(bool, d["moe"])
+        for k in ("workload", "name"):
+            if k in d:
+                kwargs[k] = str(d[k])
+        return SessionConfig(**kwargs)
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @staticmethod
+    def from_json(s: str) -> "SessionConfig":
+        return SessionConfig.from_dict(json.loads(s))
+
+    @staticmethod
+    def load(path: str) -> "SessionConfig":
+        with open(path) as f:
+            return SessionConfig.from_json(f.read())
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    # -- overrides ---------------------------------------------------------
+    def replace(self, **updates: Any) -> "SessionConfig":
+        """Functional update; section values may be partial dicts.
+
+        Merging is deep: ``replace(solver={"budget": {"iters": 200}})``
+        keeps every other budget field of the current config.
+        """
+        def deep_merge(dst: Dict[str, Any], src: Mapping[str, Any]) -> None:
+            for k, v in src.items():
+                if isinstance(v, Mapping) and isinstance(dst.get(k), dict):
+                    deep_merge(dst[k], v)
+                else:
+                    dst[k] = v
+
+        merged = self.to_dict()
+        for key, value in updates.items():
+            if key in _SECTIONS and isinstance(value, Mapping):
+                deep_merge(merged[key], value)
+            elif key in _SECTIONS and dataclasses.is_dataclass(value):
+                merged[key] = dataclasses.asdict(value)
+            else:
+                merged[key] = value
+        return SessionConfig.from_dict(merged)
+
+    # -- environment -------------------------------------------------------
+    @staticmethod
+    def from_env(prefix: str = "REPRO_",
+                 base: Optional["SessionConfig"] = None,
+                 environ: Optional[Mapping[str, str]] = None) -> "SessionConfig":
+        """Overlay ``REPRO_<SECTION>_<FIELD>`` variables onto ``base``.
+
+        ``REPRO_FABRIC_KIND=tpu-fleet``, ``REPRO_CACHE_DIR=.plan_cache``,
+        ``REPRO_MESH_SHAPE=8x8``, ``REPRO_PAYLOAD_BYTES=4e6`` — the CLI
+        and launchers all honor the same variables.
+        """
+        env = dict(os.environ if environ is None else environ)
+        cfg = base if base is not None else SessionConfig()
+        merged = cfg.to_dict()
+        scalars = {"payload_bytes", "workload", "moe", "name"}
+        for key, value in sorted(env.items()):
+            if not key.startswith(prefix):
+                continue
+            rest = key[len(prefix):].lower()
+            head, _, tail = rest.partition("_")
+            if head in _SECTIONS and tail:
+                if head == "solver" and tail.startswith("budget_"):
+                    merged["solver"].setdefault("budget", {})
+                    merged["solver"]["budget"][tail[len("budget_"):]] = value
+                else:
+                    merged[head][tail] = value
+            elif rest in scalars:
+                merged[rest] = value
+            else:
+                raise ValueError(
+                    f"unrecognized environment override {key}: no section "
+                    f"or scalar named {rest!r}")
+        return SessionConfig.from_dict(merged)

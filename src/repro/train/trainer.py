@@ -56,7 +56,15 @@ class NodeFailure(RuntimeError):
 
 @dataclasses.dataclass
 class ClusterView:
-    """The trainer's model of the fleet: fabric + current rank order."""
+    """The trainer's model of the fleet: fabric + current rank order.
+
+    ``session`` (a :class:`repro.session.Session`) makes the view a
+    Session consumer: :meth:`solve_plan` attaches the survivor fabric to
+    the session and adopts the compiled plan's mesh assignment (cached
+    under the fabric fingerprint, so elastic restarts on an unchanged
+    fabric skip the solve), and the trainer's drift observations flow
+    through :meth:`Session.observe` instead of a hand-wired reranker.
+    """
 
     fabric: Fabric
     mesh_shape: tuple
@@ -64,6 +72,7 @@ class ClusterView:
     plan: Optional[MeshPlan] = None
     alive: Optional[List[int]] = None
     payload_bytes: float = 4e6
+    session: Optional[Any] = None          # repro.session.Session
 
     def __post_init__(self):
         if self.alive is None:
@@ -86,17 +95,37 @@ class ClusterView:
         of the paper's locality exploitation.
         """
         need = int(np.prod(self.mesh_shape))
-        c_all = self.cost_matrix()
+        c_all = None
+        sel = None
         if len(self.alive) > need:
+            c_all = self.cost_matrix()
             order = np.argsort(c_all.sum(axis=1))
             sel = sorted(int(i) for i in order[:need])
             self.active = [self.alive[i] for i in sel]
-            c = c_all[np.ix_(sel, sel)]
         else:
             self.active = list(self.alive)
-            c = c_all
-        self.plan = optimize_mesh_assignment(
-            c, self.mesh_shape, self.axis_names)
+        if self.session is not None:
+            # Session consumer path: attach the survivor fabric, let the
+            # planning service compile/cache the full plan, adopt its
+            # N-D mesh assignment (same id space: subset-local indices).
+            # The session probes the attached fabric itself, so the full
+            # c_all probe above only runs when node selection needs it.
+            if self.session.config.payload_bytes != self.payload_bytes:
+                # one payload knob: drift observations are fed at the
+                # cluster payload and must match the session reference
+                self.session.config = self.session.config.replace(
+                    payload_bytes=self.payload_bytes)
+            self.session.attach(fabric=self.fabric.subset(self.active))
+            compiled = self.session.plan(
+                mesh_shape=self.mesh_shape, axis_names=self.axis_names)
+            self.plan = compiled.mesh_plan
+        else:
+            if c_all is None:
+                c = self.cost_matrix()
+            else:
+                c = c_all[np.ix_(sel, sel)]
+            self.plan = optimize_mesh_assignment(
+                c, self.mesh_shape, self.axis_names)
         return self.plan
 
     def fail(self, nodes: List[int]) -> None:
@@ -154,6 +183,10 @@ class Trainer:
         self.restarts = 0
         self.rerank_events: List[int] = []
         if cluster is not None:
+            if cluster.session is not None:
+                # one sensitivity knob: the trainer's threshold governs
+                # the session's drift monitor too
+                cluster.session.set_drift_threshold(cfg.rerank_threshold)
             if cluster.plan is None:
                 cluster.solve_plan()
             self._init_adaptation()
@@ -220,7 +253,18 @@ class Trainer:
             if self.cluster is not None and step % 10 == 0:
                 active = self.cluster.active or self.cluster.alive
                 c = self.straggler.inflate(self.cluster.cost_matrix(active))
-                _, changed = self.reranker.update(c)
+                if self.cluster.session is not None \
+                        and self.cluster.session.planned is not None:
+                    # a preset cluster.plan means the session never
+                    # compiled: fall to the reranker branch below
+                    report = self.cluster.session.observe(c)
+                    changed = report.stale
+                    replanned = self.cluster.session.planned
+                    if changed and replanned is not None \
+                            and replanned.mesh_plan is not None:
+                        self.cluster.plan = replanned.mesh_plan
+                else:
+                    _, changed = self.reranker.update(c)
                 if changed:
                     self.rerank_events.append(step)
 

@@ -1,0 +1,448 @@
+"""Tests for the ``repro.session`` facade (ISSUE-3 tentpole).
+
+Covers: SessionConfig round-trips (dict / JSON / env / replace),
+the lifecycle state machine and hooks, the non-intrusive ``wrap()``
+patch/unpatch, drift-triggered re-planning through ``observe`` and the
+background ``monitor()``, equivalence with the manual pipeline, and the
+input-validation satellite (Fabric.subset / cost_matrix).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import make_datacenter, probe_fabric, scramble
+from repro.core.probe import ProbeResult, cost_matrix
+from repro.session import (
+    AppliedPlan,
+    Session,
+    SessionConfig,
+    SessionError,
+    serve_mix,
+    train_mix,
+)
+
+SMALL = {
+    "fabric": {"kind": "datacenter", "nodes": 12, "scramble_seed": 1},
+    "solver": {"budget": {"iters": 80, "chains": 2}},
+    "payload_bytes": 1e6,
+}
+
+
+def small_config(**over):
+    return SessionConfig.from_dict(SMALL).replace(**over)
+
+
+# ---------------------------------------------------------------------------
+# SessionConfig
+# ---------------------------------------------------------------------------
+
+def test_config_dict_roundtrip():
+    cfg = small_config(mesh={"shape": "3x4", "axis_names": "data,model"})
+    assert SessionConfig.from_dict(cfg.to_dict()) == cfg
+    assert cfg.mesh.shape == (3, 4)
+    assert cfg.mesh.axis_names == ("data", "model")
+
+
+def test_config_json_roundtrip(tmp_path):
+    cfg = small_config(cache={"dir": str(tmp_path / "plans")})
+    assert SessionConfig.from_json(cfg.to_json()) == cfg
+    path = tmp_path / "session.json"
+    cfg.dump(str(path))
+    assert SessionConfig.load(str(path)) == cfg
+
+
+def test_config_env_overlay():
+    cfg = SessionConfig.from_env(environ={
+        "REPRO_FABRIC_KIND": "tpu-fleet",
+        "REPRO_FABRIC_N_PODS": "2",
+        "REPRO_FABRIC_POD_SHAPE": "4x4",
+        "REPRO_MESH_SHAPE": "2x4x4",
+        "REPRO_SOLVER_BUDGET_ITERS": "123",
+        "REPRO_CACHE_DIR": "/tmp/somewhere",
+        "REPRO_PAYLOAD_BYTES": "2e6",
+        "REPRO_MOE": "true",
+        "UNRELATED": "ignored",
+    })
+    assert cfg.fabric.kind == "tpu-fleet"
+    assert cfg.fabric.n_pods == 2
+    assert cfg.fabric.pod_shape == (4, 4)
+    assert cfg.mesh.shape == (2, 4, 4)
+    assert cfg.mesh.axis_names == ("pod", "data", "model")
+    assert cfg.solver.budget.iters == 123
+    assert cfg.cache.dir == "/tmp/somewhere"
+    assert cfg.payload_bytes == 2e6
+    assert cfg.moe is True
+
+
+def test_config_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown session config keys"):
+        SessionConfig.from_dict({"fabrik": {}})
+    with pytest.raises(ValueError, match="unknown fabric config keys"):
+        SessionConfig.from_dict({"fabric": {"knid": "datacenter"}})
+    with pytest.raises(ValueError, match="kind"):
+        SessionConfig.from_dict({"fabric": {"kind": "quantum"}})
+    with pytest.raises(ValueError, match="workload"):
+        SessionConfig.from_dict({"workload": "mine-bitcoin"})
+    with pytest.raises(ValueError, match="axis name"):
+        SessionConfig.from_dict({"mesh": {"shape": "4x4",
+                                          "axis_names": "data"}})
+
+
+def test_config_replace_merges_sections():
+    cfg = small_config()
+    cfg2 = cfg.replace(fabric={"nodes": 24})
+    assert cfg2.fabric.nodes == 24
+    assert cfg2.fabric.scramble_seed == 1         # untouched sibling key
+    assert cfg.fabric.nodes == 12                 # original is frozen
+
+
+def test_config_replace_deep_merges_budget():
+    cfg = small_config(solver={"budget": {"engine": "reference",
+                                          "iters": 999}})
+    cfg2 = cfg.replace(solver={"budget": {"iters": 200, "chains": 4}})
+    assert cfg2.solver.budget.iters == 200
+    assert cfg2.solver.budget.chains == 4
+    assert cfg2.solver.budget.engine == "reference"   # nested key survives
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_states_progress():
+    s = Session(small_config())
+    assert s.state == "created"
+    s.attach()
+    assert s.state == "attached"
+    plan = s.plan()
+    assert s.state == "planned" and plan is s.planned
+    applied = s.apply()
+    assert s.state == "applied"
+    assert isinstance(applied, AppliedPlan)
+    assert applied.plan is plan
+    s.close()
+    assert s.state == "closed"
+    s.close()                                    # idempotent
+
+
+def test_apply_is_lazy_one_call_chain():
+    with Session(small_config(mesh={"shape": "3x4"})) as s:
+        applied = s.apply()                      # attach + plan implied
+    assert s.state == "closed"
+    assert applied.plan.mesh_plan is not None
+    assert sorted(applied.order.tolist()) == list(range(12))
+    assert applied.hints                         # per-op summaries present
+    for h in applied.hints.values():
+        assert h["speedup_vs_identity"] >= 1.0 - 1e-9
+
+
+def test_closed_session_refuses_work():
+    s = Session(small_config())
+    s.close()
+    for call in (s.attach, s.plan, s.apply,
+                 lambda: s.observe(np.zeros((2, 2))), s.wrap, s.monitor):
+        with pytest.raises(SessionError, match="closed"):
+            call()
+
+
+def test_observe_before_plan_raises():
+    with Session(small_config()) as s:
+        s.attach()
+        with pytest.raises(SessionError, match="plan"):
+            s.observe(np.zeros((12, 12)))
+
+
+def test_reattach_resets_plan():
+    with Session(small_config()) as s:
+        s.plan()
+        assert s.planned is not None
+        s.attach(fabric=make_datacenter(8, seed=5))
+        assert s.planned is None
+        assert s.state == "attached"
+        assert s.plan().n == 8
+
+
+def test_hooks_fire_in_lifecycle_order():
+    seen = []
+    s = Session(small_config())
+    for event in ("attach", "plan", "apply", "close"):
+        s.on(event, lambda sess, _e=event, **kw: seen.append(_e))
+    with pytest.raises(ValueError, match="unknown session event"):
+        s.on("reticulate", lambda *a, **k: None)
+    with s:
+        s.apply()
+    assert seen == ["attach", "plan", "apply", "close"]
+
+
+def test_attach_accepts_raw_cost_matrix():
+    rng = np.random.default_rng(0)
+    c = rng.uniform(1e-5, 1e-3, size=(6, 6))
+    c = np.maximum(c, c.T)
+    np.fill_diagonal(c, 0.0)
+    with Session(small_config()) as s:
+        s.attach(probe=c)
+        plan = s.plan(mix=train_mix(1e6))
+        assert plan.n == 6
+        # no fabric oracle -> analytic cost-model scoring
+        assert plan.meta["oracle"] == "cost_model"
+
+
+# ---------------------------------------------------------------------------
+# equivalence with the manual pipeline
+# ---------------------------------------------------------------------------
+
+def test_session_plan_matches_manual_pipeline():
+    """The facade must be sugar, not a different planner."""
+    from repro.plan import PlanCache, PlanCompiler, PlanningService
+
+    cfg = small_config(mesh={"shape": "3x4"})
+    with Session(cfg) as s:
+        via_session = s.plan()
+
+    fabric, _ = scramble(make_datacenter(12, seed=0), seed=1)
+    probed = probe_fabric(fabric, seed=0)
+    service = PlanningService(
+        PlanCompiler(fabric=fabric, budget=cfg.solver.budget, seed=0),
+        PlanCache())
+    manual = service.request(probed, train_mix(1e6),
+                             mesh_shape=(3, 4),
+                             axis_names=("data", "model"))
+    service.close()
+
+    assert via_session.fingerprint.digest == manual.fingerprint.digest
+    assert set(via_session.entries) == set(manual.entries)
+    for key, e in manual.entries.items():
+        se = via_session.entries[key]
+        assert (se.algo, se.chunks, se.perm) == (e.algo, e.chunks, e.perm)
+    assert np.array_equal(via_session.mesh_plan.assignment,
+                          manual.mesh_plan.assignment)
+
+
+def test_session_cache_hits_across_sessions(tmp_path):
+    cfg = small_config(cache={"dir": str(tmp_path / "plans")})
+    with Session(cfg) as s1:
+        p1 = s1.plan()
+        assert s1.service.stats["cache_hits"] == 0
+    with Session(cfg) as s2:
+        p2 = s2.plan()
+        stats = s2.service.cache.stats
+        assert stats["disk_hits"] + stats["hits"] >= 1
+    assert p2.fingerprint.digest == p1.fingerprint.digest
+
+
+# ---------------------------------------------------------------------------
+# wrap(): the non-intrusive patch
+# ---------------------------------------------------------------------------
+
+def test_wrap_patches_and_restores_launch_surface():
+    from repro.launch import mesh as mesh_mod
+    from repro.parallel import moe_a2a
+
+    orig_make = mesh_mod.make_production_mesh
+    orig_arm = moe_a2a.arm_ep
+    s = Session(small_config())
+    with s.wrap():
+        assert s.wrapped
+        assert mesh_mod.make_production_mesh is not orig_make
+        assert moe_a2a.arm_ep is not orig_arm
+    assert not s.wrapped
+    assert mesh_mod.make_production_mesh is orig_make
+    assert moe_a2a.arm_ep is orig_arm
+    with pytest.raises(SessionError, match="closed"):
+        s.close() or s.wrap()
+
+
+def test_wrap_injects_plan_into_arm_ep():
+    """Existing arm_ep call sites (no plan kwarg) pick up the session's
+    solved all-to-all ring with zero call-site edits."""
+    from types import SimpleNamespace
+
+    from repro.parallel import moe_a2a
+
+    cfg = small_config(moe=True)
+    with Session(cfg) as s:
+        s.plan()
+        entry = s.planned.lookup("all-to-all", 1.0)
+        assert entry is not None
+        mesh = SimpleNamespace(axis_names=("data",), devices=np.zeros((12,)))
+        with s.wrap():
+            moe_a2a.arm_ep(mesh, "data", None)   # unmodified call site
+            armed = moe_a2a._EP_STATE["a2a_order"]
+        moe_a2a.clear_ep()
+    assert armed == tuple(int(i) for i in entry.local_perm)
+
+
+def test_wrap_twice_raises():
+    with Session(small_config()) as s:
+        guard = s.wrap()
+        try:
+            with pytest.raises(SessionError, match="already wrapped"):
+                s.wrap()
+        finally:
+            guard.__exit__(None, None, None)
+
+
+def test_close_unwraps():
+    from repro.parallel import moe_a2a
+
+    orig_arm = moe_a2a.arm_ep
+    s = Session(small_config())
+    s.wrap()
+    assert moe_a2a.arm_ep is not orig_arm
+    s.close()
+    assert moe_a2a.arm_ep is orig_arm
+
+
+# ---------------------------------------------------------------------------
+# drift: observe + monitor re-plans
+# ---------------------------------------------------------------------------
+
+def _degraded(c: np.ndarray, factor: float = 60.0) -> np.ndarray:
+    bad = c.copy()
+    bad *= 1.0 + np.linspace(0.0, factor, c.shape[0])[:, None]
+    bad = np.maximum(bad, bad.T)
+    np.fill_diagonal(bad, 0.0)
+    return bad
+
+
+def test_observe_drift_triggers_replan():
+    events = []
+    with Session(small_config(drift={"threshold": 1.10,
+                                     "auto_replan": True})) as s:
+        s.on("drift", lambda sess, report: events.append("drift"))
+        s.on("replan", lambda sess, plan, previous: events.append("replan"))
+        p1 = s.plan()
+        ref = s.reference_matrix()
+        report = s.observe(_degraded(ref))
+        assert report.stale and report.degraded
+        assert events == ["drift", "replan"]
+        p2 = s.planned
+        assert p2 is not p1
+        # the re-plan was compiled against the degraded costs, and the
+        # stale pre-drift fabric simulator is no longer the oracle
+        assert p2.fingerprint.digest != p1.fingerprint.digest
+        assert p2.meta["oracle"] == "cost_model"
+        # quiet observation after the re-plan: no further events
+        report2 = s.observe(s.reference_matrix())
+        assert not report2.stale
+        assert events == ["drift", "replan"]
+
+
+def test_observe_without_auto_replan_keeps_plan():
+    with Session(small_config(drift={"threshold": 1.10,
+                                     "auto_replan": False})) as s:
+        p1 = s.plan()
+        report = s.observe(_degraded(s.reference_matrix()))
+        assert report.stale
+        assert s.planned is p1                   # hot-patched, not replaced
+        assert report.repaired                   # but entries were repaired
+
+
+def test_monitor_background_replan():
+    fired = threading.Event()
+    ticks = {"n": 0}
+    with Session(small_config(drift={"threshold": 1.10,
+                                     "auto_replan": True})) as s:
+        s.plan()
+        ref = s.reference_matrix()
+
+        def poll():
+            ticks["n"] += 1
+            return _degraded(ref) if ticks["n"] == 2 else None
+
+        s.on("replan", lambda sess, **kw: fired.set())
+        t = s.monitor(poll=poll, interval_s=0.02)
+        assert fired.wait(timeout=10.0), "monitor never triggered a re-plan"
+        with pytest.raises(SessionError, match="already running"):
+            s.monitor(poll=poll, interval_s=0.02)
+    assert not t.is_alive(), "close() must stop the monitor thread"
+
+
+# ---------------------------------------------------------------------------
+# validation satellite: actionable errors instead of numpy index noise
+# ---------------------------------------------------------------------------
+
+def test_fabric_subset_validates_nodes():
+    fabric = make_datacenter(8, seed=0)
+    with pytest.raises(ValueError, match="at least one node"):
+        fabric.subset([])
+    with pytest.raises(ValueError, match="out of range"):
+        fabric.subset([0, 8])
+    with pytest.raises(ValueError, match="out of range"):
+        fabric.subset([-1, 2])
+    with pytest.raises(ValueError, match="duplicates: \\[3\\]"):
+        fabric.subset([1, 3, 3])
+    sub = fabric.subset([5, 1, 2])               # valid subset still works
+    assert sub.n == 3
+
+
+def test_cost_matrix_validates_probe():
+    with pytest.raises(ValueError, match="empty ProbeResult"):
+        cost_matrix(ProbeResult(lat=np.zeros((0, 0))))
+    with pytest.raises(ValueError, match="square"):
+        cost_matrix(ProbeResult(lat=np.zeros((3, 4))))
+    c = cost_matrix(ProbeResult(lat=np.ones((2, 2)) - np.eye(2)))
+    assert c.shape == (2, 2)
+
+
+def test_plan_rejects_mesh_fabric_size_mismatch():
+    with Session(small_config(mesh={"shape": "4x4"})) as s:   # 16 != 12
+        with pytest.raises(ValueError, match="attached fabric has 12"):
+            s.plan()
+
+
+def test_reattach_keeps_plan_cache():
+    """An elastic restart on an unchanged fabric must hit the cached
+    plan: re-attach rebuilds the fabric-bound service, not the cache."""
+    fabric = make_datacenter(10, seed=2)
+    with Session(small_config()) as s:
+        s.attach(fabric=fabric)
+        p1 = s.plan()
+        s.attach(fabric=fabric)                  # same fabric, re-probe
+        p2 = s.plan()
+        assert s.cache.stats["hits"] >= 1
+        assert p2.fingerprint.digest == p1.fingerprint.digest
+
+
+def test_set_drift_threshold_applies_to_live_monitor():
+    with Session(small_config(drift={"threshold": 1.05})) as s:
+        s.plan()
+        s.set_drift_threshold(1e9)               # effectively: never drift
+        assert s.config.drift.threshold == 1e9
+        assert s._drift.threshold == 1e9
+        report = s.observe(_degraded(s.reference_matrix()))
+        assert not report.stale
+
+
+def test_cluster_view_consumes_session():
+    """Trainer-side integration: solve_plan attaches the survivor fabric
+    to the session and adopts the compiled plan's mesh assignment."""
+    from repro.train import ClusterView
+
+    fabric = make_datacenter(12, seed=0)
+    with Session(small_config()) as s:
+        cluster = ClusterView(fabric=fabric, mesh_shape=(2, 4),
+                              axis_names=("data", "model"), session=s)
+        mesh_plan = cluster.solve_plan()
+        assert mesh_plan is s.planned.mesh_plan
+        assert mesh_plan.assignment.shape == (2, 4)
+        # 12 alive > 8 mesh slots: the most central 8 were selected
+        assert len(cluster.active) == 8
+        assert s.planned.n == 8
+        # elastic shrink after failures re-plans through the same session
+        cluster.fail([0, 5, 7, 9])
+        cluster.shrink_mesh()
+        mp2 = cluster.solve_plan()
+        assert mp2.assignment.size == int(np.prod(cluster.mesh_shape))
+        assert s.planned.n == mp2.assignment.size
+
+
+def test_mixes_shapes():
+    t = train_mix(4e6, moe=True)
+    assert {r.op for r in t.requests} == {
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all"}
+    v = serve_mix(1e6)
+    assert {r.op for r in v.requests} == {
+        "all-reduce", "all-gather", "reduce-scatter"}
