@@ -1,0 +1,207 @@
+"""Collective-IR benchmark: lowering overhead + executor agreement.
+
+The typed IR (:mod:`repro.collective`, DESIGN.md §7) sits between the
+plan compiler and every backend, so two properties must hold and stay
+held:
+
+* **lowering overhead** — compiling a ``CollectiveOp`` into a
+  ``Program``, applying the permutation pass, and materializing legacy
+  flows must stay cheap relative to a plan compile (µs per program;
+  the compiler builds hundreds per plan);
+* **executor agreement** — ``SimExecutor`` on the compiled program must
+  reproduce the legacy ``simulate_collective`` timing, and
+  ``AnalyticExecutor`` the corresponding ``CostModel``, to float
+  precision; the per-algorithm max relative error is committed so any
+  future builder/pass change that skews pricing shows up in review.
+
+Emits the harness CSV rows and writes ``BENCH_collective_ir.json`` at
+the repo root so the trajectory is tracked across PRs.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/collective_ir.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_repo_root, "src"))
+
+import numpy as np
+
+from repro.collective import (
+    AnalyticExecutor,
+    CollectiveOp,
+    JaxExecutor,
+    SimExecutor,
+    apply_permutation,
+    compile_op,
+    validate,
+)
+from repro.core import make_datacenter, make_cost_model
+from repro.core.probe import probe_fabric
+from repro.core.simulator import simulate_rounds
+from repro.core import schedule as legacy_schedule
+
+SIZE = 8e6
+
+#: the INDEPENDENT legacy reference: the free builders kept in
+#: repro.core.schedule (NOT simulate_collective, which now compiles
+#: through the registry itself — comparing against it would be
+#: tautological)
+LEGACY_BUILDERS = {
+    "ring": legacy_schedule.ring_allreduce_chunked,
+    "ring_sequential": legacy_schedule.ring_allreduce_sequential,
+    "double_binary_tree": legacy_schedule.double_binary_tree_allreduce,
+    "halving_doubling": legacy_schedule.halving_doubling_allreduce,
+    "bcube": legacy_schedule.bcube_allreduce,
+    "ring_all_gather": legacy_schedule.ring_all_gather,
+    "recursive_doubling": legacy_schedule.recursive_doubling_all_gather,
+    "all_to_all": legacy_schedule.all_to_all,
+}
+
+#: the historical schedule→cost-model mapping, spelled out (not read
+#: from the registry) so a builder mis-declaring its cost_model shows
+#: up as analytic disagreement here
+SOLVER_MODEL = {
+    "ring": "ring",
+    "ring_sequential": "ring",
+    "double_binary_tree": "double_binary_tree",
+    "halving_doubling": "halving_doubling",
+    "bcube": "bcube",
+    "ring_all_gather": "ring",
+    "recursive_doubling": "halving_doubling",
+    "all_to_all": "all_to_all",
+}
+
+#: (builder, kind, kwargs) — every registered seed algorithm; sizes are
+#: picked per-case so power-of-two builders stay feasible.
+CASES = [
+    ("ring", "allreduce", {}),
+    ("ring_sequential", "allreduce", {}),
+    ("double_binary_tree", "allreduce", {}),
+    ("halving_doubling", "allreduce", {}),
+    ("bcube", "allreduce", {"base": 4}),
+    ("ring_all_gather", "all_gather", {}),
+    ("recursive_doubling", "all_gather", {}),
+    ("all_to_all", "all_to_all", {}),
+]
+
+
+def _bench_lowering(n: int, reps: int, rng) -> list:
+    rows = []
+    perm = [int(x) for x in rng.permutation(n)]
+    for name, kind, kw in CASES:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            prog = apply_permutation(
+                compile_op(CollectiveOp(kind, SIZE, range(n)), name, **kw),
+                perm)
+            flows = prog.to_flows()
+        dt = (time.perf_counter() - t0) / reps
+        n_flows = sum(len(r) for r in flows)
+        rows.append({"name": f"collective_ir_lower_{name}",
+                     "us": dt * 1e6,
+                     "derived": f"n={n};rounds={len(flows)};flows={n_flows}"})
+    return rows
+
+
+def _bench_agreement(n: int, rng) -> tuple:
+    fab = make_datacenter(n, seed=1)
+    probe = probe_fabric(fab, seed=0, measure_bw=True)
+    sim = SimExecutor(fab)
+    analytic = AnalyticExecutor(lat=probe.lat, bw=probe.bw)
+    jax_ex = JaxExecutor()
+    rows, agree = [], {}
+    for name, kind, kw in CASES:
+        perm = [int(x) for x in rng.permutation(n)]
+        prog = apply_permutation(
+            compile_op(CollectiveOp(kind, SIZE, range(n)), name, **kw), perm)
+        validate(prog)
+        t_ir = sim.estimate(prog)
+        t_legacy = simulate_rounds(fab, LEGACY_BUILDERS[name](perm, SIZE, **kw))
+        sim_err = abs(t_ir - t_legacy) / max(t_legacy, 1e-30)
+        model = make_cost_model(SOLVER_MODEL[name],
+                                size_bytes=SIZE, lat=probe.lat,
+                                bw=probe.bw, **kw)
+        a_ir = analytic.estimate(prog)
+        a_legacy = float(model.cost(np.asarray(perm)))
+        ana_err = abs(a_ir - a_legacy) / max(abs(a_legacy), 1e-30)
+        agree[name] = {
+            "sim_seconds": float(t_ir),
+            "sim_rel_err_vs_legacy": float(sim_err),
+            "analytic_seconds": float(a_ir),
+            "analytic_rel_err_vs_cost_model": float(ana_err),
+            "lowerable": bool(jax_ex.can_lower(prog)),
+            "fingerprint": prog.fingerprint(),
+        }
+        rows.append({
+            "name": f"collective_ir_agree_{name}",
+            "us": t_ir * 1e6,
+            "derived": f"sim_err={sim_err:.1e};analytic_err={ana_err:.1e}"})
+    return rows, agree
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_collective_ir.json",
+        seed: int = 0):
+    n = 16 if smoke else 64
+    reps = 5 if smoke else 20
+    rng = np.random.default_rng(seed)
+
+    rows = _bench_lowering(n, reps, rng)
+    agree_rows, agree = _bench_agreement(16, rng)
+    rows += agree_rows
+
+    max_sim = max(a["sim_rel_err_vs_legacy"] for a in agree.values())
+    max_ana = max(a["analytic_rel_err_vs_cost_model"] for a in agree.values())
+    ok = max_sim < 1e-9 and max_ana < 1e-9
+    rows.append({"name": "collective_ir_max_err", "us": 0.0,
+                 "derived": f"sim={max_sim:.1e};analytic={max_ana:.1e};"
+                            f"{'OK' if ok else 'DISAGREE'}"})
+
+    results = {
+        "benchmark": "collective_ir",
+        "smoke": smoke,
+        "lowering_n": n,
+        "size_bytes": SIZE,
+        "lowering_us": {r["name"].removeprefix("collective_ir_lower_"):
+                        round(r["us"], 2)
+                        for r in rows if r["name"].startswith(
+                            "collective_ir_lower_")},
+        "agreement": agree,
+        "max_sim_rel_err": float(max_sim),
+        "max_analytic_rel_err": float(max_ana),
+        "executors_agree": bool(ok),
+    }
+    for r in rows:
+        print(f"{r['name']},{r['us']:.3f},{r['derived']}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", file=sys.stderr)
+    if not ok:
+        # RuntimeError (not SystemExit): benchmarks/run.py catches
+        # Exception to print-and-continue; standalone main() still
+        # exits non-zero on the propagated error
+        raise RuntimeError("executor disagreement above tolerance")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: smaller group, fewer reps")
+    ap.add_argument("--out", default="BENCH_collective_ir.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

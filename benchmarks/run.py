@@ -12,6 +12,7 @@ import traceback
 
 def main() -> None:
     from . import (
+        collective_ir,
         e2e_training,
         fig1_distribution,
         fig2_heatmap,
@@ -25,7 +26,7 @@ def main() -> None:
     failures = 0
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
-                plan_compiler):
+                plan_compiler, collective_ir):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

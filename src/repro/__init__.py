@@ -36,6 +36,14 @@ _EXPORTS = {
     "MeshConfig": "repro.session",
     "train_mix": "repro.session",
     "serve_mix": "repro.session",
+    # collective IR
+    "CollectiveOp": "repro.collective",
+    "Program": "repro.collective",
+    "AnalyticExecutor": "repro.collective",
+    "SimExecutor": "repro.collective",
+    "JaxExecutor": "repro.collective",
+    "compile_op": "repro.collective",
+    "apply_permutation": "repro.collective",
     # plan subsystem
     "CollectiveRequest": "repro.plan",
     "JobMix": "repro.plan",

@@ -199,11 +199,13 @@ def cmd_plan(args: argparse.Namespace) -> int:
         print(f"[plan] {mode}{plan.fingerprint.digest} ({hit}) "
               f"mix={cfg.workload} n={plan.n}")
         for (op, bucket, group), e in sorted(plan.entries.items()):
+            fp = f" prog={e.program_fingerprint}" if e.program_fingerprint \
+                else ""
             print(f"  {op:<15} bucket=2^{bucket:<3} group={len(group):>4} "
                   f"-> {e.algo:<20} chunks={e.chunks} "
                   f"t={e.expected_time * 1e3:.3f}ms "
                   f"({e.best_identity_time / max(e.expected_time, 1e-30):.2f}x "
-                  f"vs identity)")
+                  f"vs identity){fp}")
         if plan.mesh_plan is not None:
             mp = plan.mesh_plan
             print(f"  mesh {'x'.join(map(str, mp.assignment.shape))} "

@@ -1,0 +1,79 @@
+"""repro.collective — the typed collective IR (DESIGN.md §7).
+
+One representation for "a collective", shared by the analytic cost
+models, the contention simulator, the plan compiler, and the jax
+runtime::
+
+    from repro.collective import (
+        CollectiveOp, compile_op, apply_permutation, chunk,
+        SimExecutor, AnalyticExecutor, JaxExecutor,
+    )
+
+    op   = CollectiveOp("allreduce", size_bytes=64e6, group=range(16))
+    prog = compile_op(op, "ring")                  # typed Program
+    prog = apply_permutation(prog, solved_perm)    # rank order = IR pass
+    prog = chunk(prog, 4)                          # pipelining = IR pass
+    secs = SimExecutor(fabric).estimate(prog)      # oracle seconds
+    low  = JaxExecutor().lower(prog)               # ppermute schedule
+
+The legacy surfaces remain as shims: ``repro.core.schedule.SCHEDULES``
+delegates here (with a DeprecationWarning), and the plan compiler's
+``(algo, chunks, perm)`` string tuples are now derived views of the
+Program each entry carries.
+"""
+
+from .builders import (  # noqa: F401
+    AlgorithmBuilder,
+    candidates,
+    compile_op,
+    get_builder,
+    register_builder,
+    registered_builders,
+)
+from .executors import (  # noqa: F401
+    AnalyticExecutor,
+    Executor,
+    JaxExecutor,
+    Lowered,
+    SimExecutor,
+)
+from .ir import (  # noqa: F401
+    INITS,
+    KINDS,
+    POSTCONDITIONS,
+    CollectiveOp,
+    FlowInstr,
+    Program,
+    ProgramInvariantError,
+    kind_from_op,
+    op_from_kind,
+    validate,
+)
+from .passes import apply_permutation, chunk, fuse_rounds  # noqa: F401
+
+__all__ = [
+    "AlgorithmBuilder",
+    "AnalyticExecutor",
+    "CollectiveOp",
+    "Executor",
+    "FlowInstr",
+    "INITS",
+    "JaxExecutor",
+    "KINDS",
+    "Lowered",
+    "POSTCONDITIONS",
+    "Program",
+    "ProgramInvariantError",
+    "SimExecutor",
+    "apply_permutation",
+    "candidates",
+    "chunk",
+    "compile_op",
+    "fuse_rounds",
+    "get_builder",
+    "kind_from_op",
+    "op_from_kind",
+    "register_builder",
+    "registered_builders",
+    "validate",
+]

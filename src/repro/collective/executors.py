@@ -1,0 +1,205 @@
+"""Pluggable executors for collective :class:`Program`\\ s.
+
+The :class:`Executor` protocol decouples *what a collective does* (the
+IR) from *how it is priced or run*:
+
+* :class:`AnalyticExecutor` — wraps the closed-form cost-model math of
+  :mod:`repro.core.cost_models` (each builder declares which analytic
+  model describes it);
+* :class:`SimExecutor` — wraps the contention-aware max-min-fair
+  simulator (:func:`repro.core.simulator.simulate_rounds`), the
+  offline "real cloud" oracle;
+* :class:`JaxExecutor` — lowers ring / all-to-all programs to the
+  static ``ppermute`` shift schedules the jax runtime consumes
+  (:mod:`repro.parallel.moe_a2a`, :mod:`repro.kernels.ring_collective`)
+  instead of each call site hand-rolling them.
+
+``estimate`` returns seconds for one execution of the program
+(pipelining included); ``lower`` returns a :class:`Lowered` artifact.
+Executors raise ``NotImplementedError`` for the direction they don't
+support, so a caller holding any ``Executor`` can feature-test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.cost_models import CostModel, make_cost_model
+from repro.core.simulator import simulate_rounds
+from repro.core.topology import Fabric
+
+from .ir import Program
+
+__all__ = [
+    "Executor",
+    "Lowered",
+    "AnalyticExecutor",
+    "SimExecutor",
+    "JaxExecutor",
+]
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Anything that can price and/or lower a collective Program."""
+
+    name: str
+
+    def estimate(self, program: Program) -> float:
+        """Seconds for one execution of ``program``."""
+        ...
+
+    def lower(self, program: Program) -> "Lowered":
+        """Backend artifact for ``program`` (shift schedule, links...)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowered:
+    """A jax-lowerable schedule in *axis-index* (local position) space.
+
+    ``order[pos] = shard`` is the ring order the program's permutation
+    induces over the group; ``links`` are the ppermute neighbor pairs of
+    that ring; ``shift_rounds`` are the per-round ``(src, dst)`` pairs
+    (all-to-all programs only; each round is a bijection).
+    """
+
+    kind: str                                    # "ring" | "shift_a2a"
+    order: Tuple[int, ...]
+    links: Tuple[Tuple[int, int], ...]
+    shift_rounds: Tuple[Tuple[Tuple[int, int], ...], ...] = ()
+    fingerprint: str = ""
+
+
+class AnalyticExecutor:
+    """Prices programs with the paper's closed-form cost models.
+
+    Construct with full-fabric node-indexed matrices: either one
+    pairwise ``cost_matrix`` (paper mode — rounds rescale linearly) or
+    ``lat``/``bw`` (alpha-beta mode).  Group extraction and the
+    rank→local-index mapping happen here, so callers hand over programs
+    whose ``perm`` speaks global node ids.
+    """
+
+    name = "analytic"
+
+    def __init__(self, cost_matrix: Optional[np.ndarray] = None, *,
+                 lat: Optional[np.ndarray] = None,
+                 bw: Optional[np.ndarray] = None):
+        if cost_matrix is None and lat is None:
+            raise ValueError(
+                "AnalyticExecutor needs a cost_matrix or lat (+ bw)")
+        self.c = None if cost_matrix is None else np.asarray(
+            cost_matrix, dtype=np.float64)
+        self.lat = None if lat is None else np.asarray(lat, dtype=np.float64)
+        self.bw = None if bw is None else np.asarray(bw, dtype=np.float64)
+        self._models: Dict[tuple, CostModel] = {}
+
+    def model_for(self, program: Program) -> CostModel:
+        """The builder-declared CostModel at the program's piece size."""
+        g = np.asarray(sorted(program.op.group), dtype=np.int64)
+        size = program.op.size_bytes / program.chunk_factor
+        kwargs = {k: v for k, v in program.kwargs.items() if k == "base"}
+        key = (program.cost_model, tuple(g), float(size),
+               tuple(sorted(kwargs.items())))
+        model = self._models.get(key)
+        if model is None:
+            if self.c is not None:
+                model = make_cost_model(
+                    program.cost_model, cost_matrix=self.c[np.ix_(g, g)],
+                    size_bytes=size, **kwargs)
+            else:
+                sub_bw = None if self.bw is None else self.bw[np.ix_(g, g)]
+                if sub_bw is None:
+                    model = make_cost_model(
+                        program.cost_model,
+                        cost_matrix=self.lat[np.ix_(g, g)],
+                        size_bytes=size, **kwargs)
+                else:
+                    model = make_cost_model(
+                        program.cost_model, size_bytes=size,
+                        lat=self.lat[np.ix_(g, g)], bw=sub_bw, **kwargs)
+            self._models[key] = model
+        return model
+
+    def estimate(self, program: Program) -> float:
+        model = self.model_for(program)
+        return program.chunk_factor * float(model.cost(program.local_perm))
+
+    def lower(self, program: Program) -> Lowered:
+        raise NotImplementedError(
+            "AnalyticExecutor prices programs; use JaxExecutor to lower")
+
+
+class SimExecutor:
+    """Prices programs on the contention-aware flow-level simulator."""
+
+    name = "sim"
+
+    def __init__(self, fabric: Fabric, jitter: float = 0.0,
+                 seed: Optional[int] = None):
+        self.fabric = fabric
+        self.jitter = jitter
+        self.seed = seed
+
+    def estimate(self, program: Program) -> float:
+        if self.jitter == 0.0 and program.chunk_factor > 1:
+            # deterministic pipelining: the k pieces are identical, so
+            # simulate one and scale instead of re-water-filling k times
+            return program.chunk_factor * simulate_rounds(
+                self.fabric, program.piece_flows())
+        rng = np.random.default_rng(self.seed) if self.seed is not None \
+            else None
+        return simulate_rounds(self.fabric, program.to_flows(),
+                               rng=rng, jitter=self.jitter)
+
+    def lower(self, program: Program) -> Lowered:
+        raise NotImplementedError(
+            "SimExecutor prices programs; use JaxExecutor to lower")
+
+
+#: builder names JaxExecutor can lower, by shape
+_RING_ALGOS = ("ring", "ring_sequential", "ring_all_gather")
+_SHIFT_ALGOS = ("all_to_all",)
+
+
+class JaxExecutor:
+    """Lowers ring / all-to-all programs to static ppermute schedules.
+
+    The artifact speaks *axis-index* space: position i within the
+    (sorted) group.  ``order`` is the program's local permutation — the
+    ring order the solved rank placement induces — and the schedules
+    are derived from the program's rounds, so a runtime consuming a
+    :class:`Lowered` executes exactly the flows the plan was priced on.
+    """
+
+    name = "jax"
+
+    def can_lower(self, program: Program) -> bool:
+        return program.algorithm in _RING_ALGOS + _SHIFT_ALGOS
+
+    def lower(self, program: Program) -> Lowered:
+        lp = tuple(int(i) for i in program.local_perm)
+        n = program.n
+        links = tuple((lp[i], lp[(i + 1) % n]) for i in range(n))
+        if program.algorithm in _RING_ALGOS:
+            return Lowered(kind="ring", order=lp, links=links,
+                           fingerprint=program.fingerprint())
+        if program.algorithm in _SHIFT_ALGOS:
+            shift_rounds = tuple(
+                tuple(sorted((lp[f.src], lp[f.dst]) for f in rnd))
+                for rnd in program.rounds)
+            return Lowered(kind="shift_a2a", order=lp, links=links,
+                           shift_rounds=shift_rounds,
+                           fingerprint=program.fingerprint())
+        raise NotImplementedError(
+            f"JaxExecutor cannot lower {program.algorithm!r} programs; "
+            f"lowerable algorithms: {_RING_ALGOS + _SHIFT_ALGOS}")
+
+    def estimate(self, program: Program) -> float:
+        raise NotImplementedError(
+            "JaxExecutor lowers programs; wall-clock timing belongs to "
+            "the benchmark harness (use Analytic/SimExecutor to price)")

@@ -531,6 +531,10 @@ def make_cost_model(
     bw: Optional[np.ndarray] = None,
     **kwargs,
 ) -> CostModel:
+    if algo not in COST_MODELS:
+        raise ValueError(
+            f"unknown cost model {algo!r}; registered models: "
+            f"{', '.join(sorted(COST_MODELS))}")
     if cost_matrix is not None:
         n = cost_matrix.shape[0]
     else:

@@ -1,4 +1,4 @@
-"""Explicit flow schedules for collective algorithms.
+"""Explicit flow schedules for collective algorithms (legacy surface).
 
 While :mod:`repro.core.cost_models` is the paper's *analytic* view (used by
 the solver), this module emits the actual per-round point-to-point flows a
@@ -12,12 +12,24 @@ conservative standard model for collectives).
 
 All builders take ``perm`` with ``perm[rank] = node`` and emit flows in
 *node* space.
+
+.. deprecated::
+    The typed collective IR (:mod:`repro.collective`, DESIGN.md §7) is
+    the primary representation: builders there compile a
+    ``CollectiveOp`` into a chunk-annotated ``Program`` and the
+    executors price/lower it.  :data:`SCHEDULES` remains as a thin
+    compatibility shim *over that registry* — indexing it warns with
+    ``DeprecationWarning`` and returns a wrapper that compiles through
+    the registered builder.  The free functions below are kept
+    (warning-free) as the independent reference implementation the
+    IR's cross-backend equivalence suite pins itself against.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+import warnings
+from typing import Callable, Iterator, List, Mapping, Sequence
 
 import numpy as np
 
@@ -246,13 +258,91 @@ def all_to_all(perm: Sequence[int], size: float) -> List[List[Flow]]:
     return rounds
 
 
-SCHEDULES = {
-    "ring": ring_allreduce_chunked,
-    "ring_sequential": ring_allreduce_sequential,
-    "halving_doubling": halving_doubling_allreduce,
-    "double_binary_tree": double_binary_tree_allreduce,
-    "bcube": bcube_allreduce,
-    "ring_all_gather": ring_all_gather,
-    "recursive_doubling": recursive_doubling_all_gather,
-    "all_to_all": all_to_all,
+#: default CollectiveOp kind each legacy builder name compiles under the
+#: typed IR (the registry's builders are kind-aware; the legacy call
+#: signature is not).
+_SHIM_KINDS = {
+    "ring": "allreduce",
+    "ring_sequential": "allreduce",
+    "halving_doubling": "allreduce",
+    "double_binary_tree": "allreduce",
+    "bcube": "allreduce",
+    "ring_all_gather": "all_gather",
+    "recursive_doubling": "all_gather",
+    "all_to_all": "all_to_all",
 }
+
+
+def _registry_wrapper(algo: str) -> Callable[..., List[List[Flow]]]:
+    """Legacy ``(perm, size, **kw) -> List[List[Flow]]`` via the IR."""
+
+    def build(perm: Sequence[int], size: float, **kwargs) -> List[List[Flow]]:
+        from repro.collective import (
+            CollectiveOp, apply_permutation, compile_op)
+
+        perm = [int(p) for p in perm]
+        op = CollectiveOp(_SHIM_KINDS[algo], float(size), sorted(perm))
+        return apply_permutation(
+            compile_op(op, algo, **kwargs), perm).to_flows()
+
+    build.__name__ = f"{algo}_via_registry"
+    return build
+
+
+class UnknownAlgorithmError(KeyError, ValueError):
+    """Unknown algorithm name in the legacy ``SCHEDULES`` shim.
+
+    Subclasses BOTH ``KeyError`` (the old plain-dict contract, so
+    ``SCHEDULES.get(name, default)`` and ``except KeyError`` callers
+    keep working) and ``ValueError`` (the registry's actionable-error
+    contract).
+    """
+
+    def __str__(self) -> str:          # KeyError repr-quotes its arg
+        return self.args[0] if self.args else ""
+
+
+class _ScheduleShim(Mapping):
+    """Deprecating view of the :mod:`repro.collective` builder registry.
+
+    Indexing warns (``DeprecationWarning``, once per call site under the
+    default warning filters) and returns a legacy-signature wrapper that
+    compiles through the registered builder; unknown names raise
+    :class:`UnknownAlgorithmError` (a ``KeyError`` *and* ``ValueError``)
+    listing the registered builders.
+    """
+
+    def _names(self) -> tuple:
+        from repro.collective import registered_builders
+
+        return registered_builders()
+
+    def __getitem__(self, algo: str) -> Callable[..., List[List[Flow]]]:
+        warnings.warn(
+            "repro.core.schedule.SCHEDULES is deprecated; compile typed "
+            "programs via repro.collective (compile_op / candidates) and "
+            "price them through the Executor protocol",
+            DeprecationWarning, stacklevel=2)
+        from repro.collective import get_builder
+
+        try:
+            get_builder(algo)
+        except ValueError as e:
+            raise UnknownAlgorithmError(str(e)) from None
+        if algo not in _SHIM_KINDS:
+            raise UnknownAlgorithmError(
+                f"builder {algo!r} has no legacy SCHEDULES signature; "
+                f"use repro.collective.compile_op directly")
+        return _registry_wrapper(algo)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(n for n in self._names() if n in _SHIM_KINDS)
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+    def __contains__(self, algo: object) -> bool:
+        return algo in _SHIM_KINDS and algo in self._names()
+
+
+SCHEDULES = _ScheduleShim()

@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .schedule import SCHEDULES, Flow
+from .schedule import Flow
 from .topology import Fabric
 
 __all__ = ["simulate_rounds", "simulate_collective", "CollectiveSimulator"]
@@ -109,10 +109,28 @@ def simulate_collective(
     jitter: float = 0.0,
     **kwargs,
 ) -> float:
-    """Simulate one allreduce of ``size_bytes`` under rank order ``perm``."""
-    rounds = SCHEDULES[algo](perm, size_bytes, **kwargs)
+    """Simulate one collective of ``size_bytes`` under rank order ``perm``.
+
+    ``algo`` names a registered :mod:`repro.collective` builder; the
+    schedule is compiled through the typed IR (this function stays a
+    supported oracle API — it does not route through the deprecated
+    ``SCHEDULES`` shim).
+    """
+    from repro.collective import CollectiveOp, apply_permutation, compile_op
+    from .schedule import _SHIM_KINDS
+
+    perm = [int(p) for p in perm]
+    kind = _SHIM_KINDS.get(algo)
+    if kind is None:
+        from repro.collective import get_builder
+
+        kind = get_builder(algo).kinds[0]    # ValueError on unknown algo
+    prog = apply_permutation(
+        compile_op(CollectiveOp(kind, float(size_bytes), sorted(perm)),
+                   algo, **kwargs),
+        perm)
     rng = np.random.default_rng(seed) if seed is not None else None
-    return simulate_rounds(fabric, rounds, rng=rng, jitter=jitter)
+    return simulate_rounds(fabric, prog.to_flows(), rng=rng, jitter=jitter)
 
 
 class CollectiveSimulator:

@@ -31,6 +31,7 @@ Gradients flow through shard_map / all_to_all / scatter natively.
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -74,10 +75,11 @@ def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model",
                  if op == "all-to-all" and len(grp) == n_ep]
         entry = max(cands, key=lambda e: e.size_bytes) if cands else None
         if entry is not None:
-            # The shift ring pairs EP *axis indices*; the entry's perm is
-            # in node-id space.  On a planned mesh, axis index i holds
-            # node mesh_plan.flat[i], so compose with its inverse; on an
-            # identity mesh the node at axis index i IS node i.
+            # The shift ring pairs EP *axis indices*; the entry's
+            # Program speaks node-id space.  On a planned mesh, axis
+            # index i holds node mesh_plan.flat[i], so compose with its
+            # inverse; on an identity mesh the lowered ring order (the
+            # Program's local permutation) is already the axis order.
             if plan.mesh_plan is not None:
                 flat = plan.mesh_plan.flat
                 if flat.size == n_ep and set(map(int, flat)) == set(entry.group):
@@ -86,6 +88,10 @@ def arm_ep(mesh: Mesh, ep_axis: str = "data", tp_axis: Optional[str] = "model",
                 # else: axis indices don't map 1:1 onto plan nodes
                 # (multi-axis mesh) — leave the identity shift ring
             else:
+                # == JaxExecutor().lower(entry.program()).order, without
+                # recompiling the Program here: _a2a_shift obtains the
+                # actual lowered schedule from the (cached) _lowered_a2a
+                # for this order
                 order = tuple(int(i) for i in entry.local_perm)
     _EP_STATE.update(
         mesh=mesh,
@@ -108,25 +114,42 @@ def ep_armed(cfg: ModelConfig) -> bool:
     return cfg.n_experts % n_ep == 0
 
 
+@functools.lru_cache(maxsize=64)
+def _lowered_a2a(n: int, order: Optional[Tuple[int, ...]]):
+    """The typed-IR lowering of the shift-scheduled a2a over ``order``.
+
+    Compiles an ``all_to_all`` :class:`~repro.collective.Program`,
+    applies ``order`` as the permutation pass, and lowers it through
+    :class:`repro.collective.JaxExecutor` — the same Program/Executor
+    pipeline the plan compiler priced, so the runtime walks exactly the
+    per-round flows the plan was scored on.
+    """
+    from repro.collective import (
+        CollectiveOp, JaxExecutor, apply_permutation, compile_op)
+
+    if order is None:
+        order = tuple(range(n))
+    assert sorted(order) == list(range(n)), f"bad shift order {order}"
+    prog = compile_op(CollectiveOp("all_to_all", float(n), range(n)),
+                      "all_to_all")
+    return JaxExecutor().lower(apply_permutation(prog, order))
+
+
 def _shift_perms(n: int, order: Optional[Tuple[int, ...]] = None):
     """Static per-round (src, dst) pairs of the shift-scheduled a2a.
 
     ``order`` is a ring order of the n shards (``order[pos] = shard``):
     round k pairs every shard with the peer k steps ahead *along that
-    ring*, so a solved rank order from the plan compiler's
-    ``AllToAllCost`` changes which physical links each round crosses —
-    the identity order reproduces the classic i -> i+k shift exactly.
-    Every round is a bijection and every ordered pair appears exactly
-    once across the n-1 rounds (property-tested).
+    ring*, so a solved rank order from the plan compiler changes which
+    physical links each round crosses — the identity order reproduces
+    the classic i -> i+k shift exactly.  Every round is a bijection and
+    every ordered pair appears exactly once across the n-1 rounds
+    (property-tested).  The schedule itself comes from the typed IR
+    (:func:`_lowered_a2a`); this wrapper is the legacy list-of-pairs
+    view of that lowering.
     """
-    if order is None:
-        order = tuple(range(n))
-    assert sorted(order) == list(range(n)), f"bad shift order {order}"
-    pos = {s: p for p, s in enumerate(order)}
-    return [
-        [(i, order[(pos[i] + k) % n]) for i in range(n)]
-        for k in range(1, n)
-    ]
+    low = _lowered_a2a(n, None if order is None else tuple(order))
+    return [list(rnd) for rnd in low.shift_rounds]
 
 
 def _a2a_shift(x: jnp.ndarray, axis: str, n: int,

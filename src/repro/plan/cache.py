@@ -43,7 +43,9 @@ import numpy as np
 from repro.core.cost_models import make_cost_model
 from repro.core.dynamic import AdaptiveReranker
 
-from .compiler import _SOLVER_MODEL, EntryKey, Plan, PlanEntry
+from repro.collective import get_builder
+
+from .compiler import EntryKey, Plan, PlanEntry
 
 __all__ = [
     "FabricFingerprint",
@@ -354,7 +356,7 @@ class DriftMonitor:
 
     @staticmethod
     def _factory(entry: PlanEntry):
-        m_algo = _SOLVER_MODEL[entry.algo]
+        m_algo = get_builder(entry.algo).cost_model
         kwargs = {"base": entry.algo_kwargs["base"]} \
             if "base" in entry.algo_kwargs else {}
 

@@ -10,12 +10,13 @@ reformulation, Arzani et al.).  This module compiles the whole mix once:
   pulled from optimized HLO via :meth:`JobMix.from_hlo` (which wraps
   :func:`repro.launch.hlo_analysis.parse_collectives`);
 * :class:`PlanCompiler` enumerates, per (collective, message-size bucket,
-  process group), every feasible schedule from
-  :data:`repro.core.schedule.SCHEDULES`, solves a rank permutation for
-  each with the vectorized solver (:func:`repro.core.solver.solve`), and
-  scores (algorithm, chunks, perm) candidates against the
-  contention-aware simulator (:mod:`repro.core.simulator`) as the oracle
-  — falling back to the analytic cost model when no fabric is available
+  process group), every feasible registered builder from
+  :mod:`repro.collective`, compiles each into a typed ``Program``,
+  solves a rank permutation with the vectorized solver
+  (:func:`repro.core.solver.solve`) and applies it as an IR pass, and
+  scores the candidate programs through the ``Executor`` protocol —
+  :class:`repro.collective.SimExecutor` (contention-aware oracle) with
+  a fabric, :class:`repro.collective.AnalyticExecutor` without one
   (live probing on real hardware);
 * the result is a :class:`Plan`: a JSON-serializable table of
   :class:`PlanEntry` rows plus an optional N-D :class:`MeshPlan`, keyed
@@ -35,11 +36,21 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.collective import (
+    AnalyticExecutor,
+    CollectiveOp,
+    Program,
+    SimExecutor,
+    apply_permutation,
+    candidates as builder_candidates,
+    chunk as chunk_pass,
+    compile_op,
+    get_builder,
+    kind_from_op,
+)
 from repro.core.cost_models import make_cost_model
 from repro.core.probe import ProbeResult
 from repro.core.reorder import MeshPlan, mesh_axis_cost, optimize_mesh_assignment
-from repro.core.schedule import SCHEDULES
-from repro.core.simulator import simulate_rounds
 from repro.core.solver import solve
 from repro.core.topology import Fabric
 
@@ -59,53 +70,16 @@ __all__ = [
 #: so there is no algorithm choice to make.
 PLANNED_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all")
 
-#: schedule algo -> cost-model algo the solver optimizes the rank order
-#: with (the simulator then scores the *actual* schedule).
-_SOLVER_MODEL = {
-    "ring": "ring",
-    "ring_sequential": "ring",
-    "halving_doubling": "halving_doubling",
-    "double_binary_tree": "double_binary_tree",
-    "bcube": "bcube",
-    "ring_all_gather": "ring",
-    "recursive_doubling": "halving_doubling",
-    "all_to_all": "all_to_all",
-}
-
-
-def _is_pow2(n: int) -> bool:
-    return n >= 2 and n & (n - 1) == 0
-
-
-def _is_pow(n: int, base: int) -> bool:
-    m = 1
-    while m < n:
-        m *= base
-    return m == n and n >= base
-
-
 def candidate_algorithms(op: str, n: int) -> List[Tuple[str, Dict[str, int]]]:
-    """Feasible (schedule algo, builder kwargs) pairs for ``op`` at size n.
+    """Feasible (builder name, builder kwargs) pairs for ``op`` at size n.
 
-    Power-of-two-only schedules are gated on n (see the ValueError
-    contracts in :mod:`repro.core.schedule`); bcube prefers base 4 when
-    n is a power of 4, else base 2 when n is a power of two.
+    Thin alias over :func:`repro.collective.candidates`: power-of-two
+    builders are gated on n via each builder's ``feasible`` contract;
+    bcube prefers base 4 when n is a power of 4, else base 2.
     """
-    if op == "all-reduce":
-        out: List[Tuple[str, Dict[str, int]]] = [
-            ("ring", {}), ("ring_sequential", {}), ("double_binary_tree", {})]
-        if _is_pow2(n):
-            out.append(("halving_doubling", {}))
-            out.append(("bcube", {"base": 4 if _is_pow(n, 4) else 2}))
-        return out
-    if op in ("all-gather", "reduce-scatter"):
-        out = [("ring_all_gather", {})]
-        if _is_pow2(n):
-            out.append(("recursive_doubling", {}))
-        return out
-    if op == "all-to-all":
-        return [("all_to_all", {})]
-    return []
+    if op not in PLANNED_OPS:
+        return []
+    return builder_candidates(op, n)
 
 
 def size_bucket(size_bytes: float) -> int:
@@ -171,13 +145,21 @@ class JobMix:
 
 @dataclasses.dataclass
 class PlanEntry:
-    """The compiled choice for one (op, size bucket, process group)."""
+    """The compiled choice for one (op, size bucket, process group).
+
+    The canonical artifact is the typed ``Program`` the compiler scored
+    (rebuildable via :meth:`program`, identity-checked by
+    ``program_fingerprint``).  The ``(algo, chunks, perm)`` string-tuple
+    fields remain as a deprecating alias of that program — kept for
+    JSON compatibility and human-readable plan dumps; new consumers
+    should go through :meth:`program` and the Executor protocol.
+    """
 
     op: str
     bucket: int
     size_bytes: float                 # representative payload of the bucket
     group: Tuple[int, ...]            # global node ids, sorted
-    algo: str                         # key into SCHEDULES
+    algo: str                         # registered repro.collective builder
     algo_kwargs: Dict[str, int]       # e.g. {"base": 4} for bcube
     chunks: int                       # payload split into this many pipelined pieces
     perm: Tuple[int, ...]             # perm[rank] = global node id
@@ -185,6 +167,7 @@ class PlanEntry:
     identity_times: Dict[str, float]  # algo -> oracle seconds at identity order, chunks=1
     solver_cost: float                # cost-model objective of perm
     oracle: str                       # "simulator" | "cost_model"
+    program_fingerprint: str = ""     # Program.fingerprint() of the choice
 
     @property
     def local_perm(self) -> np.ndarray:
@@ -195,6 +178,21 @@ class PlanEntry:
     @property
     def best_identity_time(self) -> float:
         return min(self.identity_times.values())
+
+    def program(self) -> Program:
+        """Rebuild the typed ``Program`` this entry's choice denotes.
+
+        Deterministic: compile the registered builder, apply the stored
+        permutation and chunking as IR passes.  The result's
+        ``fingerprint()`` matches ``program_fingerprint`` for entries
+        compiled by this version (older cached plans carry ``""``).
+        """
+        op = CollectiveOp(kind_from_op(self.op), self.size_bytes, self.group)
+        prog = compile_op(op, self.algo, **self.algo_kwargs)
+        prog = apply_permutation(prog, self.perm)
+        if self.chunks > 1:
+            prog = chunk_pass(prog, self.chunks)
+        return prog
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -216,6 +214,7 @@ class PlanEntry:
             identity_times={k: float(v) for k, v in d["identity_times"].items()},
             solver_cost=float(d["solver_cost"]),
             oracle=d["oracle"],
+            program_fingerprint=d.get("program_fingerprint", ""),
         )
 
 
@@ -364,7 +363,9 @@ class PlanCompiler:
 
     def _model(self, algo: str, lat, bw, size_bytes: float,
                akw: Dict[str, int]):
-        m_algo = _SOLVER_MODEL[algo]
+        """Cost model the solver optimizes the rank order with (the
+        oracle executor then scores the *actual* program)."""
+        m_algo = get_builder(algo).cost_model
         kwargs = {"base": akw["base"]} if "base" in akw else {}
         if bw is not None:
             return make_cost_model(m_algo, size_bytes=size_bytes,
@@ -374,20 +375,15 @@ class PlanCompiler:
                                size_bytes=size_bytes, **kwargs)
 
     # -- oracle -----------------------------------------------------------
-    def _oracle_time(self, algo: str, akw: Dict[str, int],
-                     node_perm: Sequence[int], size_bytes: float,
-                     model_cache: Dict, lat, bw) -> float:
-        """Seconds for one execution of ``algo`` at ``size_bytes``."""
+    def _oracle(self, lat, bw):
+        """The Executor candidates are scored on: the contention-aware
+        simulator when a fabric is attached, the analytic cost-model
+        math otherwise (live probing on hardware we cannot simulate)."""
         if self.fabric is not None:
-            rounds = SCHEDULES[algo](list(node_perm), size_bytes, **akw)
-            return simulate_rounds(self.fabric, rounds)
-        key = (algo, tuple(sorted(akw.items())), float(size_bytes))
-        model = model_cache.get(key)
-        if model is None:
-            model = model_cache[key] = self._model(algo, lat, bw, size_bytes, akw)
-        pos = {node: i for i, node in enumerate(sorted(node_perm))}
-        local = np.asarray([pos[x] for x in node_perm], dtype=np.int64)
-        return float(model.cost(local))
+            return SimExecutor(self.fabric)
+        if bw is not None:
+            return AnalyticExecutor(lat=lat, bw=bw)
+        return AnalyticExecutor(cost_matrix=lat)
 
     # -- compilation ------------------------------------------------------
     def compile(self, probe, mix: JobMix,
@@ -467,44 +463,61 @@ class PlanCompiler:
         n_g = len(g)
         sub_lat = lat[np.ix_(g, g)]
         sub_bw = bw[np.ix_(g, g)] if bw is not None else None
-        oracle = "simulator" if self.fabric is not None else "cost_model"
-        model_cache: Dict = {}
+        use_sim = self.fabric is not None
+        oracle_name = "simulator" if use_sim else "cost_model"
+        executor = self._oracle(lat, bw) if use_sim else None
+        coll_op = CollectiveOp(kind_from_op(op), size_bytes, group)
 
-        best = None                       # (time, algo, akw, chunks, perm, mcost)
+        best = None          # (time, algo, akw, chunks, perm, mcost)
         identity_times: Dict[str, float] = {}
         identity_local = np.arange(n_g)
         # Chunking is scored as serial pieces, and the analytic cost
         # models are affine in payload — so without the contention-aware
         # simulator (whose fair-share rates are nonlinear) chunks > 1 is
         # mathematically dominated by chunks=1: skip the wasted oracles.
-        chunk_cands = self.budget.chunk_candidates \
-            if self.fabric is not None else (1,)
+        chunk_cands = self.budget.chunk_candidates if use_sim else (1,)
         for algo, akw in candidate_algorithms(op, n_g):
             model = self._model(algo, sub_lat, sub_bw, size_bytes, akw)
+            # Programs are only materialized when the oracle reads their
+            # rounds (the simulator): the analytic oracle is the same
+            # closed-form math as ``model`` at chunks=1, and building
+            # every candidate's rounds just to discard them dominates
+            # large-fleet compiles (bcube at n=1024 is ~1M flows).
+            base_prog = compile_op(coll_op, algo, **akw) if use_sim else None
             solved = solve(model, method="auto", iters=self.budget.iters,
                            chains=self.budget.chains, seed=self.seed,
                            engine=self.budget.engine,
                            backend=self.budget.backend)
             for local in (identity_local, np.asarray(solved.perm)):
                 node_perm = g[local]
+                placed = apply_permutation(base_prog, node_perm) \
+                    if use_sim else None
                 for chunks in chunk_cands:
                     if chunks > 1 and size_bytes / chunks < self.budget.min_chunk_bytes:
                         continue
-                    t = chunks * self._oracle_time(
-                        algo, akw, node_perm.tolist(), size_bytes / chunks,
-                        model_cache, sub_lat, sub_bw)
+                    if use_sim:
+                        t = executor.estimate(chunk_pass(placed, chunks))
+                    else:
+                        # == AnalyticExecutor.estimate on the candidate
+                        # program (equivalence-tested), minus the rounds
+                        t = float(model.cost(local))
                     if local is identity_local and chunks == 1:
                         identity_times[algo] = t
-                    cand = (t, algo, akw, chunks, node_perm, float(model.cost(local)))
+                    cand = (t, algo, akw, chunks, node_perm,
+                            float(model.cost(local)))
                     if best is None or t < best[0]:
                         best = cand
 
         assert best is not None, f"no feasible algorithm for {op} over {n_g} nodes"
         t, algo, akw, chunks, node_perm, mcost = best
+        winner = chunk_pass(
+            apply_permutation(compile_op(coll_op, algo, **akw), node_perm),
+            chunks)
         return PlanEntry(
             op=op, bucket=bucket, size_bytes=size_bytes, group=group,
             algo=algo, algo_kwargs=dict(akw), chunks=chunks,
             perm=tuple(int(x) for x in node_perm),
             expected_time=float(t), identity_times=identity_times,
-            solver_cost=mcost, oracle=oracle,
+            solver_cost=mcost, oracle=oracle_name,
+            program_fingerprint=winner.fingerprint(),
         )

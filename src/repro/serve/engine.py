@@ -87,7 +87,34 @@ class GenerationEngine:
                     "speedup_vs_identity":
                         e.best_identity_time / max(e.expected_time, 1e-30),
                 }
+                if e.program_fingerprint:
+                    out[op]["program"] = e.program_fingerprint
         return out
+
+    def lowered_collective(self, op: str, payload_bytes: float = 1e6):
+        """The plan's lowered schedule for ``op`` at ``payload_bytes``.
+
+        Rebuilds the entry's typed :class:`~repro.collective.Program`
+        and lowers it through :class:`repro.collective.JaxExecutor` —
+        the engine pulls the ppermute ring/shift schedule from the plan
+        instead of re-deriving it from ``(algo, perm)`` tuples.  Returns
+        a :class:`repro.collective.Lowered` (ring links or a2a shift
+        rounds in axis-index space), or ``None`` when the plan has no
+        entry for ``op`` or the chosen algorithm has no static ppermute
+        form (e.g. halving-doubling, which XLA runs natively).
+        """
+        if self.session is not None and self.session.planned is not None:
+            self.plan = self.session.planned       # pick up drift re-plans
+        if self.plan is None:
+            return None
+        entry = self.plan.lookup(op, payload_bytes)
+        if entry is None:
+            return None
+        from repro.collective import JaxExecutor
+
+        ex = JaxExecutor()
+        prog = entry.program()
+        return ex.lower(prog) if ex.can_lower(prog) else None
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:

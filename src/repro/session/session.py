@@ -382,6 +382,81 @@ class Session:
                 }
         return out
 
+    # -- collective IR: executors + lowering -------------------------------
+    def executor(self, backend: str = "auto"):
+        """An :class:`repro.collective.Executor` bound to this session.
+
+        * ``"sim"`` — :class:`~repro.collective.SimExecutor` over the
+          attached fabric (the contention-aware oracle the plan was
+          scored on);
+        * ``"analytic"`` — :class:`~repro.collective.AnalyticExecutor`
+          over the probed lat/bw matrices (the only pricing available
+          on live fleets, and after a drift re-plan);
+        * ``"jax"`` — :class:`~repro.collective.JaxExecutor` (lowering
+          to ppermute schedules; no pricing);
+        * ``"auto"`` — ``sim`` when a fabric oracle is attached, else
+          ``analytic`` — i.e. whatever oracle the compiler itself would
+          score candidates with right now.
+        """
+        from repro.collective import (
+            AnalyticExecutor, JaxExecutor, SimExecutor)
+
+        self._require_open("build an executor")
+        if backend == "jax":
+            return JaxExecutor()
+        if backend not in ("auto", "sim", "analytic"):
+            raise ValueError(f"unknown executor backend {backend!r}; "
+                             f"expected 'auto', 'sim', 'analytic' or 'jax'")
+        # attach BEFORE resolving "auto": a pre-attach session has no
+        # oracle fabric yet, and resolving on that transient state would
+        # pick a different backend than the compiler's own oracle
+        if self._probe is None:
+            self.attach()
+        if backend == "auto":
+            backend = "sim" if self._oracle_fabric is not None else "analytic"
+        if backend == "sim":
+            if self._oracle_fabric is None:
+                raise SessionError(
+                    "executor('sim') needs an attached fabric oracle; "
+                    "attach a synthetic fabric or use 'analytic'")
+            return SimExecutor(self._oracle_fabric)
+        probe = self._probe
+        if probe.bw is not None:
+            return AnalyticExecutor(lat=probe.lat, bw=probe.bw)
+        return AnalyticExecutor(cost_matrix=probe.lat)
+
+    def lower(self, op: str, size_bytes: Optional[float] = None,
+              group: Optional[Sequence[int]] = None):
+        """The plan's lowered schedule for ``op`` (lazily planning).
+
+        Looks up the plan entry for ``op`` at ``size_bytes`` (default:
+        the session payload), rebuilds its typed Program, and lowers it
+        with :class:`repro.collective.JaxExecutor`.  This is how
+        runtime consumers (``moe_a2a.arm_ep``, the serve engine) pull
+        ppermute ring/shift schedules from the plan instead of
+        re-deriving them from ``(algo, perm)`` string tuples.
+        """
+        from repro.collective import JaxExecutor
+
+        self._require_open("lower")
+        if self._plan is None:
+            self.plan()
+        payload = self.config.payload_bytes if size_bytes is None \
+            else float(size_bytes)
+        entry = self._plan.lookup(op, payload, group)
+        if entry is None:
+            raise SessionError(
+                f"plan has no entry for op {op!r} at {payload:.0f} bytes; "
+                f"planned ops: {sorted({k[0] for k in self._plan.entries})}")
+        ex = JaxExecutor()
+        prog = entry.program()
+        if not ex.can_lower(prog):
+            raise SessionError(
+                f"entry for {op!r} chose {entry.algo!r}, which has no "
+                f"static ppermute lowering (XLA runs it natively); "
+                f"lowerable choices are the ring family and all_to_all")
+        return ex.lower(prog)
+
     # -- drift: observe / monitor -----------------------------------------
     def observe(self, cost_matrix_now: np.ndarray) -> DriftReport:
         """Feed a refreshed full-fabric cost matrix into drift tracking.

@@ -1,0 +1,409 @@
+"""The typed collective IR: builders, passes, executors (DESIGN.md §7).
+
+Four suites:
+
+* **Program invariants** (property-tested): every registered builder's
+  program validates — structural byte conservation (each flow's bytes
+  equal its chunk count times the declared chunk size) plus the
+  semantic postcondition via abstract interpretation (every rank ends
+  holding the full reduced/gathered result, per the builder's declared
+  completion contract).
+* **Pass semantics**: ``apply_permutation`` reproduces the legacy
+  builder-threaded ``perm`` flow-for-flow; ``chunk`` equals k serial
+  pieces at 1/k payload; ``fuse_rounds`` only merges participant-
+  disjoint rounds and preserves validity.
+* **Cross-backend equivalence**: for every registered algorithm,
+  ``SimExecutor`` on the compiled program matches the legacy
+  ``simulate_collective`` timing, and ``AnalyticExecutor`` matches the
+  corresponding ``CostModel``, within tolerance.
+* **Lowering + error contracts**: ``JaxExecutor`` reproduces the moe
+  shift schedule / ring links; unknown algorithm names raise
+  actionable ``ValueError``\\ s listing the registered builders.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback when dev deps absent
+    from _hypothesis_shim import given, settings, st
+
+from repro.collective import (
+    AnalyticExecutor,
+    CollectiveOp,
+    JaxExecutor,
+    ProgramInvariantError,
+    SimExecutor,
+    apply_permutation,
+    candidates,
+    chunk,
+    compile_op,
+    fuse_rounds,
+    get_builder,
+    registered_builders,
+    validate,
+)
+from repro.core import make_datacenter, make_cost_model, simulate_collective
+from repro.core import schedule as legacy
+from repro.core.probe import probe_fabric
+
+#: (builder, kind, kwargs, valid group sizes) — every registered seed
+#: algorithm in every kind it compiles
+CASES = [
+    ("ring", "allreduce", {}, (2, 3, 5, 8, 12)),
+    ("ring_sequential", "allreduce", {}, (2, 3, 5, 8, 12)),
+    ("double_binary_tree", "allreduce", {}, (2, 3, 5, 8, 12)),
+    ("halving_doubling", "allreduce", {}, (2, 4, 8, 16)),
+    ("bcube", "allreduce", {"base": 2}, (4, 8)),
+    ("bcube", "allreduce", {"base": 4}, (4, 16)),
+    ("ring_all_gather", "all_gather", {}, (2, 3, 5, 8, 12)),
+    ("ring_all_gather", "reduce_scatter", {}, (2, 3, 5, 8, 12)),
+    ("recursive_doubling", "all_gather", {}, (2, 4, 8, 16)),
+    ("recursive_doubling", "reduce_scatter", {}, (2, 4, 8, 16)),
+    ("all_to_all", "all_to_all", {}, (2, 3, 5, 8, 12)),
+]
+
+SIZE = 1e6
+
+
+def _build(name, kind, kw, n, group=None):
+    group = tuple(range(n)) if group is None else tuple(group)
+    return compile_op(CollectiveOp(kind, SIZE, group), name, **kw)
+
+
+def _flow_key(rounds):
+    """Order-insensitive per-round (src, dst, size) multisets."""
+    return [sorted((f.src, f.dst, round(f.size, 6)) for f in rnd)
+            for rnd in rounds]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_every_schedule_algorithm_is_a_registered_builder():
+    assert set(legacy.SCHEDULES) <= set(registered_builders())
+
+
+def test_get_builder_unknown_name_lists_registered():
+    with pytest.raises(ValueError, match="ring.*all_to_all|registered"):
+        get_builder("nccl_tree")
+
+
+def test_make_cost_model_unknown_name_lists_registered():
+    with pytest.raises(ValueError, match="registered models"):
+        make_cost_model("nccl_tree", cost_matrix=np.zeros((4, 4)))
+
+
+def test_candidates_match_legacy_gating():
+    from repro.plan import candidate_algorithms
+
+    for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
+        for n in (1, 3, 4, 8, 12, 16):
+            assert candidate_algorithms(op, n) == candidates(op, n)
+    assert ("halving_doubling", {}) not in candidates("all-reduce", 12)
+    assert ("bcube", {"base": 4}) in candidates("all-reduce", 16)
+    assert ("bcube", {"base": 2}) in candidates("all-reduce", 8)
+
+
+def test_schedules_shim_warns_and_delegates():
+    with pytest.warns(DeprecationWarning, match="repro.collective"):
+        build = legacy.SCHEDULES["ring"]
+    rounds = build(np.arange(4), SIZE)
+    assert len(rounds) == 2 * 3 and all(len(r) == 4 for r in rounds)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="registered builders"):
+            legacy.SCHEDULES["nope"]
+
+
+# ---------------------------------------------------------------------------
+# Program invariants (satellite: property tests)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kind,kw,ns", CASES,
+                         ids=[f"{c[0]}-{c[1]}" for c in CASES])
+def test_program_validates_everywhere(name, kind, kw, ns):
+    for n in ns:
+        prog = _build(name, kind, kw, n)
+        validate(prog)                            # structure + semantics
+        # byte totals survive permutation (structure is rank-space)
+        perm = tuple(int(x) for x in
+                     np.random.default_rng(n).permutation(n))
+        permuted = apply_permutation(prog, perm)
+        validate(permuted)
+        assert permuted.total_bytes == pytest.approx(prog.total_bytes)
+        assert permuted.n_rounds == prog.n_rounds
+
+
+@pytest.mark.parametrize("name,kind,kw", [(c[0], c[1], c[2]) for c in CASES],
+                         ids=[f"{c[0]}-{c[1]}" for c in CASES])
+def test_degenerate_single_rank_program(name, kind, kw):
+    if name in ("halving_doubling", "recursive_doubling", "bcube"):
+        pytest.skip("power-of-two builders require n >= 2")
+    prog = _build(name, kind, kw, 1)
+    validate(prog)
+    assert prog.rounds == ()
+
+
+def test_copy_flows_do_not_count_as_reductions():
+    """A copy OVERWRITES the destination: a builder that emits 'copy'
+    where a reduction is required must not validate complete."""
+    prog = _build("ring_sequential", "allreduce", {}, 2)
+    Flow = prog.rounds[0][0].__class__
+    fake = prog.replace(rounds=(
+        (Flow(0, 1, SIZE, "copy", (0,)),),
+        (Flow(1, 0, SIZE, "copy", (0,)),),
+    ), postcondition="allreduce")
+    with pytest.raises(ProgramInvariantError, match="incomplete"):
+        validate(fake)
+    # the same shape with reduce flows IS a (tiny) allreduce
+    validate(fake.replace(rounds=(
+        (Flow(0, 1, SIZE, "reduce", (0,)),),
+        (Flow(1, 0, SIZE, "reduce", (0,)),),
+    )))
+
+
+def test_validator_catches_broken_programs():
+    prog = _build("ring", "allreduce", {}, 4)
+    # drop the last round: the all-gather lap can no longer complete
+    broken = prog.replace(rounds=prog.rounds[:-1])
+    with pytest.raises(ProgramInvariantError, match="incomplete"):
+        validate(broken)
+    # corrupt a flow's payload: byte conservation trips
+    bad_round = (prog.rounds[0][0].__class__(
+        src=0, dst=1, size=SIZE, op="reduce", chunks=(0,)),
+    ) + prog.rounds[0][1:]
+    with pytest.raises(ProgramInvariantError, match="bytes"):
+        validate(prog.replace(rounds=(bad_round,) + prog.rounds[1:]))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_permutation_pass_matches_builder_threaded_perm(seed):
+    """apply_permutation == threading perm through the legacy builder."""
+    rng = np.random.default_rng(seed)
+    name, kind, kw, ns = CASES[seed % len(CASES)]
+    if kind == "reduce_scatter":
+        kind = "all_gather"       # legacy builders emit the AG schedule
+    n = ns[seed % len(ns)]
+    perm = [int(x) for x in rng.permutation(n)]
+    prog = apply_permutation(_build(name, kind, kw, n), perm)
+    legacy_fn = getattr(legacy, {
+        "ring": "ring_allreduce_chunked",
+        "ring_sequential": "ring_allreduce_sequential",
+        "halving_doubling": "halving_doubling_allreduce",
+        "double_binary_tree": "double_binary_tree_allreduce",
+        "bcube": "bcube_allreduce",
+        "ring_all_gather": "ring_all_gather",
+        "recursive_doubling": "recursive_doubling_all_gather",
+        "all_to_all": "all_to_all",
+    }[name])
+    assert _flow_key(prog.to_flows()) == _flow_key(legacy_fn(perm, SIZE, **kw))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_program_fingerprint_is_stable_and_perm_sensitive(seed):
+    rng = np.random.default_rng(seed)
+    name, kind, kw, ns = CASES[seed % len(CASES)]
+    n = ns[seed % len(ns)]
+    prog = _build(name, kind, kw, n)
+    assert prog.fingerprint() == _build(name, kind, kw, n).fingerprint()
+    perm = tuple(int(x) for x in rng.permutation(n))
+    if perm != tuple(range(n)):
+        assert apply_permutation(prog, perm).fingerprint() != \
+            prog.fingerprint()
+    assert chunk(prog, 2).fingerprint() != prog.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# passes
+# ---------------------------------------------------------------------------
+
+def test_apply_permutation_accepts_node_and_local_space():
+    group = (10, 20, 30, 40)
+    prog = compile_op(CollectiveOp("allreduce", SIZE, group), "ring")
+    by_node = apply_permutation(prog, (30, 10, 40, 20))
+    by_local = apply_permutation(prog, (2, 0, 3, 1))
+    assert by_node.perm == by_local.perm == (30, 10, 40, 20)
+    with pytest.raises(ValueError, match="rearrangement"):
+        apply_permutation(prog, (1, 2, 3, 5))
+
+
+def test_chunk_pass_is_serial_pipelining():
+    fab = make_datacenter(8, seed=3)
+    prog = _build("ring", "allreduce", {}, 8)
+    sim = SimExecutor(fab)
+    t1 = simulate_collective(fab, "ring", list(range(8)), SIZE / 4)
+    assert sim.estimate(chunk(prog, 4)) == pytest.approx(4 * t1, rel=1e-12)
+    assert chunk(prog, 1) is prog
+    with pytest.raises(ValueError, match=">= 1"):
+        chunk(prog, 0)
+
+
+def test_fuse_rounds_merges_only_disjoint_participants():
+    prog = _build("ring", "allreduce", {}, 4)
+    fused, n_fused = fuse_rounds(prog)
+    assert n_fused == 0 and fused is prog     # every rank is in every round
+    # synthetic program with participant-disjoint adjacent rounds
+    base = _build("ring_sequential", "allreduce", {}, 8)
+    Flow = base.rounds[0][0].__class__
+    rounds = ((Flow(0, 1, SIZE, "reduce", (0,)),),
+              (Flow(2, 3, SIZE, "reduce", (0,)),),
+              (Flow(3, 4, SIZE, "reduce", (0,)),))
+    synth = base.replace(rounds=rounds, postcondition="none")
+    fused, n_fused = fuse_rounds(synth)
+    assert n_fused == 1 and len(fused.rounds) == 2
+    assert {(f.src, f.dst) for f in fused.rounds[0]} == {(0, 1), (2, 3)}
+    validate(fused, semantics=False)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence (satellite)
+# ---------------------------------------------------------------------------
+
+#: the INDEPENDENT legacy reference implementations (free builders in
+#: repro.core.schedule) — NOT simulate_collective, which itself compiles
+#: through the registry now and would make the comparison tautological
+LEGACY_BUILDERS = {
+    "ring": legacy.ring_allreduce_chunked,
+    "ring_sequential": legacy.ring_allreduce_sequential,
+    "double_binary_tree": legacy.double_binary_tree_allreduce,
+    "halving_doubling": legacy.halving_doubling_allreduce,
+    "bcube": legacy.bcube_allreduce,
+    "ring_all_gather": legacy.ring_all_gather,
+    "recursive_doubling": legacy.recursive_doubling_all_gather,
+    "all_to_all": legacy.all_to_all,
+}
+
+#: the historical schedule→cost-model mapping, spelled out so a builder
+#: mis-declaring its ``cost_model`` fails the analytic comparison
+SOLVER_MODEL = {
+    "ring": "ring", "ring_sequential": "ring",
+    "double_binary_tree": "double_binary_tree",
+    "halving_doubling": "halving_doubling", "bcube": "bcube",
+    "ring_all_gather": "ring", "recursive_doubling": "halving_doubling",
+    "all_to_all": "all_to_all",
+}
+
+
+@pytest.mark.parametrize("name,kind,kw,ns", CASES,
+                         ids=[f"{c[0]}-{c[1]}" for c in CASES])
+def test_sim_executor_matches_legacy_simulator(name, kind, kw, ns):
+    from repro.core.simulator import simulate_rounds
+
+    fab = make_datacenter(16, seed=1)
+    rng = np.random.default_rng(7)
+    for n in [x for x in ns if x <= 16]:
+        perm = [int(x) for x in rng.permutation(n)]
+        prog = apply_permutation(_build(name, kind, kw, n), perm)
+        t_ir = SimExecutor(fab).estimate(prog)
+        t_legacy = simulate_rounds(fab, LEGACY_BUILDERS[name](perm, SIZE, **kw))
+        assert t_ir == pytest.approx(t_legacy, rel=1e-9), (name, kind, n)
+        # the supported oracle API agrees too
+        t_api = simulate_collective(fab, name, perm, SIZE, **kw)
+        assert t_api == pytest.approx(t_legacy, rel=1e-9), (name, kind, n)
+
+
+@pytest.mark.parametrize("name,kind,kw,ns", CASES,
+                         ids=[f"{c[0]}-{c[1]}" for c in CASES])
+def test_analytic_executor_matches_cost_model(name, kind, kw, ns):
+    fab = make_datacenter(16, seed=1)
+    probe = probe_fabric(fab, seed=0, measure_bw=True)
+    rng = np.random.default_rng(11)
+    for matrices in ({"cost_matrix": probe.lat},
+                     {"lat": probe.lat, "bw": probe.bw}):
+        ex = AnalyticExecutor(**matrices)
+        for n in [x for x in ns if x <= 16]:
+            perm = [int(x) for x in rng.permutation(n)]
+            prog = apply_permutation(_build(name, kind, kw, n), perm)
+            model = make_cost_model(
+                SOLVER_MODEL[name], size_bytes=SIZE,
+                **{k: v[:n, :n] for k, v in matrices.items()}, **kw)
+            want = float(model.cost(np.asarray(perm)))
+            assert ex.estimate(prog) == pytest.approx(want, rel=1e-9), \
+                (name, kind, n)
+
+
+def test_plan_entry_program_reproduces_oracle_time():
+    """entry.program() through the session's executor == expected_time."""
+    from repro.plan import CollectiveRequest, JobMix, PlanCompiler, SolveBudget
+
+    fab = make_datacenter(8, seed=5)
+    probe = probe_fabric(fab, seed=0, measure_bw=True)
+    mix = JobMix(requests=(CollectiveRequest("all-reduce", 4e6),
+                           CollectiveRequest("all-to-all", 2e6)))
+    plan = PlanCompiler(fabric=fab,
+                        budget=SolveBudget(iters=80, chains=2)).compile(
+        probe, mix)
+    sim = SimExecutor(fab)
+    for entry in plan.entries.values():
+        prog = entry.program()
+        assert prog.fingerprint() == entry.program_fingerprint
+        assert sim.estimate(prog) == pytest.approx(
+            entry.expected_time, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# jax lowering
+# ---------------------------------------------------------------------------
+
+def test_jax_lowering_matches_moe_shift_perms():
+    from repro.parallel.moe_a2a import _shift_perms
+
+    order = (3, 1, 4, 0, 6, 2, 7, 5)
+    prog = apply_permutation(_build("all_to_all", "all_to_all", {}, 8), order)
+    low = JaxExecutor().lower(prog)
+    assert low.kind == "shift_a2a" and low.order == order
+    assert [list(r) for r in low.shift_rounds] == _shift_perms(8, order)
+    # every round a bijection; every ordered pair exactly once
+    seen = set()
+    for rnd in low.shift_rounds:
+        assert sorted(s for s, _ in rnd) == list(range(8))
+        assert sorted(d for _, d in rnd) == list(range(8))
+        seen.update(rnd)
+    assert len(seen) == 8 * 7
+
+
+def test_jax_lowering_ring_links():
+    from repro.kernels.ring_collective import _ring_links
+
+    perm = (2, 0, 3, 1)
+    prog = apply_permutation(_build("ring", "allreduce", {}, 4), perm)
+    low = JaxExecutor().lower(prog)
+    assert low.kind == "ring"
+    assert list(low.links) == _ring_links(perm)
+
+
+def test_jax_executor_refuses_unlowerable_programs():
+    ex = JaxExecutor()
+    prog = _build("halving_doubling", "allreduce", {}, 8)
+    assert not ex.can_lower(prog)
+    with pytest.raises(NotImplementedError, match="lower"):
+        ex.lower(prog)
+
+
+# ---------------------------------------------------------------------------
+# session facade integration
+# ---------------------------------------------------------------------------
+
+def test_session_executor_and_lower():
+    from repro import Session, SessionConfig
+
+    cfg = SessionConfig.from_dict({
+        "fabric": {"kind": "datacenter", "nodes": 8, "scramble_seed": 2},
+        "solver": {"budget": {"iters": 60, "chains": 2}},
+        "cache": {"dir": None}, "moe": True,
+    })
+    with Session(cfg) as s:
+        plan = s.plan()
+        entry = plan.lookup("all-to-all", cfg.payload_bytes)
+        est = s.executor().estimate(entry.program())
+        assert est == pytest.approx(entry.expected_time, rel=1e-12)
+        low = s.lower("all-to-all")
+        assert low.kind == "shift_a2a" and len(low.shift_rounds) == 7
+        analytic = s.executor("analytic")
+        assert analytic.estimate(entry.program()) > 0
+        with pytest.raises(ValueError, match="unknown executor backend"):
+            s.executor("tpu")
