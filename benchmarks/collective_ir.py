@@ -46,7 +46,7 @@ from repro.collective import (
     validate,
 )
 from repro.core import make_datacenter, make_cost_model
-from repro.core.probe import probe_fabric
+from repro.fabric import probe_fabric
 from repro.core.simulator import simulate_rounds
 from repro.core import schedule as legacy_schedule
 

@@ -1,0 +1,244 @@
+"""Fabric subsystem benchmark: probe-count and solve-time scaling.
+
+Three sections, all through the public ``repro.fabric`` surface:
+
+* **sparse vs dense plan quality** — on a scrambled multi-tenant
+  datacenter and a scrambled two-pod TPU fleet, compile a plan from a
+  dense probe and from a ≤25%-budget sparse probe (analytic compile),
+  then referee both plans with the contention-aware simulator (the
+  synthetic "real cloud").  Acceptance bar: the sparse plan's oracle
+  time within 5% of the dense plan's.
+* **hierarchy-decomposed solve scaling** — at N up to 1024, flat SA
+  solve vs :func:`repro.core.optimize_rank_order_hierarchical` over the
+  recovered tree.  Acceptance bar: ≥3x faster at N=1024 at matching
+  ring cost.
+* **probe-count scaling** — sparse probes spent vs the dense n(n-1),
+  showing the O(n·log n + K²) trajectory.
+
+Emits the harness CSV rows and writes ``BENCH_fabric.json`` at the repo
+root so the trajectory is tracked across PRs.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/fabric_probe.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_repo_root, "src"))
+
+import numpy as np
+
+from repro.collective import (
+    CollectiveOp,
+    SimExecutor,
+    apply_permutation,
+    chunk,
+    compile_op,
+    kind_from_op,
+)
+from repro.core import (
+    make_cost_model,
+    optimize_rank_order_hierarchical,
+    solve,
+)
+from repro.fabric import (
+    cost_matrix,
+    infer_hierarchy,
+    make_datacenter,
+    make_tpu_fleet,
+    probe_fabric,
+    scramble,
+    sparse_probe_fabric,
+)
+from repro.plan import CollectiveRequest, JobMix, PlanCompiler, SolveBudget
+
+SPARSE_BUDGET = 0.25
+
+
+def train_mix() -> JobMix:
+    return JobMix((
+        CollectiveRequest("all-reduce", 64e6),
+        CollectiveRequest("all-gather", 8e6, count=2.0),
+        CollectiveRequest("reduce-scatter", 8e6, count=2.0),
+        CollectiveRequest("all-to-all", 4e6, count=4.0),
+    ), name="train")
+
+
+def sim_total(fab, plan, mix: JobMix) -> float:
+    """Referee a compiled plan on the contention-aware simulator."""
+    ex = SimExecutor(fab)
+    total = 0.0
+    for r in mix.requests:
+        e = plan.lookup(r.op, r.size_bytes, r.group)
+        prog = chunk(apply_permutation(
+            compile_op(CollectiveOp(kind_from_op(e.op), e.size_bytes,
+                                    e.group), e.algo, **e.algo_kwargs),
+            e.perm), e.chunks)
+        total += r.count * ex.estimate(prog)
+    return total
+
+
+def bench_plan_quality(smoke: bool, seed: int):
+    mix = train_mix()
+    budget = SolveBudget(iters=200 if smoke else 600, chains=4)
+    fabrics = {
+        "datacenter": scramble(make_datacenter(64, seed=0), seed=1)[0],
+        "tpu_fleet": scramble(make_tpu_fleet(n_pods=2, pod_shape=(4, 8),
+                                             seed=0), seed=1)[0],
+    }
+    out, rows = {}, []
+    for name, fab in fabrics.items():
+        comp = PlanCompiler(budget=budget, seed=seed)   # analytic compile
+        t0 = time.perf_counter()
+        dense_plan = comp.compile(probe_fabric(fab, seed=seed), mix)
+        dense_compile_s = time.perf_counter() - t0
+        sp = sparse_probe_fabric(fab, budget=SPARSE_BUDGET, seed=seed)
+        t0 = time.perf_counter()
+        sparse_plan = comp.compile(sp, mix)
+        sparse_compile_s = time.perf_counter() - t0
+        td = sim_total(fab, dense_plan, mix)
+        ts = sim_total(fab, sparse_plan, mix)
+        ratio = ts / td
+        out[name] = {
+            "n": fab.n,
+            "probe_fraction": round(float(sp.probe_fraction), 4),
+            "probe_budget": SPARSE_BUDGET,
+            "hierarchy_tiers": sp.hierarchy.n_tiers,
+            "dense_sim_s": float(td),
+            "sparse_sim_s": float(ts),
+            "sparse_vs_dense_ratio": round(float(ratio), 4),
+            "within_5pct": bool(ratio <= 1.05),
+            "dense_compile_s": round(dense_compile_s, 3),
+            "sparse_compile_s": round(sparse_compile_s, 3),
+            "compile_speedup": round(dense_compile_s /
+                                     max(sparse_compile_s, 1e-9), 1),
+        }
+        rows.append({
+            "name": f"fabric_sparse_quality_{name}",
+            "us": ts * 1e6,
+            "derived": f"dense={td * 1e6:.1f}us;ratio={ratio:.3f};"
+                       f"probes={sp.probe_fraction * 100:.1f}%"})
+    return out, rows
+
+
+def bench_solve_scaling(smoke: bool, seed: int):
+    sizes = [256] if smoke else [256, 1024]
+    out, rows = {}, []
+    for n in sizes:
+        fab, _ = scramble(make_datacenter(n, seed=0), seed=1)
+        c = cost_matrix(probe_fabric(fab, seed=seed), 0.0)
+        t0 = time.perf_counter()
+        h = infer_hierarchy(c)
+        infer_s = time.perf_counter() - t0
+        model = make_cost_model("ring", c, 0.0)
+        t0 = time.perf_counter()
+        flat = solve(model, iters=800, chains=8, seed=seed)
+        flat_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        hier = optimize_rank_order_hierarchical(c, h, "ring")
+        hier_s = time.perf_counter() - t0
+        speedup = flat_s / max(hier_s, 1e-9)
+        out[str(n)] = {
+            "tiers": h.n_tiers,
+            "infer_s": round(infer_s, 3),
+            "flat_solve_s": round(flat_s, 3),
+            "hier_solve_s": round(hier_s, 4),
+            "solve_speedup": round(speedup, 1),
+            "flat_cost": float(flat.cost),
+            "hier_cost": float(hier.cost),
+            "cost_ratio_hier_vs_flat": round(hier.cost /
+                                             max(flat.cost, 1e-30), 4),
+            "geq_3x": bool(speedup >= 3.0),
+        }
+        rows.append({
+            "name": f"fabric_hier_solve_n{n}",
+            "us": hier_s * 1e6,
+            "derived": f"flat={flat_s * 1e6:.0f}us;speedup={speedup:.1f}x;"
+                       f"cost_ratio={hier.cost / max(flat.cost, 1e-30):.3f}"})
+    return out, rows
+
+
+def bench_probe_scaling(smoke: bool, seed: int):
+    """Probes spent vs n: with fill_budget=False the structural floor
+    (landmarks + intra-cluster + inter reps) grows ~O(n·log n + K²)
+    while the dense cost grows n² — the declining fraction is the
+    scaling story; the default budget-filling mode pads to the cap."""
+    sizes = [64, 128] if smoke else [64, 128, 256, 512, 1024]
+    out, rows = {}, []
+    for n in sizes:
+        fab, _ = scramble(make_datacenter(n, seed=0), seed=1)
+        t0 = time.perf_counter()
+        sp = sparse_probe_fabric(fab, budget=SPARSE_BUDGET, seed=seed,
+                                 fill_budget=False)
+        probe_s = time.perf_counter() - t0
+        filled = sparse_probe_fabric(fab, budget=SPARSE_BUDGET, seed=seed)
+        out[str(n)] = {
+            "structural_probes": int(sp.probes_used),
+            "filled_probes": int(filled.probes_used),
+            "dense_probes": n * (n - 1),
+            "structural_fraction": round(float(sp.probe_fraction), 4),
+            "filled_fraction": round(float(filled.probe_fraction), 4),
+            "probe_s": round(probe_s, 3),
+            "tiers": sp.hierarchy.n_tiers,
+        }
+        rows.append({
+            "name": f"fabric_sparse_probes_n{n}",
+            "us": probe_s * 1e6,
+            "derived": f"structural={sp.probes_used}/{n * (n - 1)}"
+                       f"({sp.probe_fraction * 100:.1f}%);"
+                       f"filled={filled.probe_fraction * 100:.1f}%"})
+    return out, rows
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_fabric.json",
+        seed: int = 0):
+    quality, q_rows = bench_plan_quality(smoke, seed)
+    solving, s_rows = bench_solve_scaling(smoke, seed)
+    probing, p_rows = bench_probe_scaling(smoke, seed)
+    results = {
+        "benchmark": "fabric_probe",
+        "smoke": smoke,
+        "sparse_budget": SPARSE_BUDGET,
+        "plan_quality": quality,
+        "solve_scaling": solving,
+        "probe_scaling": probing,
+    }
+    rows = q_rows + s_rows + p_rows
+    for r in rows:
+        print(f"{r['name']},{r['us']:.3f},{r['derived']}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", file=sys.stderr)
+    # acceptance gates (full runs only; smoke sizes are reduced).
+    # RuntimeError (not SystemExit): benchmarks/run.py catches Exception
+    # per module, so one failed gate must not abort the whole suite.
+    if not smoke:
+        bad = [k for k, v in quality.items() if not v["within_5pct"]]
+        if bad:
+            raise RuntimeError(f"sparse plan quality exceeded 5% on: {bad}")
+        if not solving.get("1024", {}).get("geq_3x", False):
+            raise RuntimeError("hierarchy-decomposed solve < 3x at N=1024")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: reduced sizes and solver budget")
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

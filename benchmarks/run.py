@@ -14,6 +14,7 @@ def main() -> None:
     from . import (
         collective_ir,
         e2e_training,
+        fabric_probe,
         fig1_distribution,
         fig2_heatmap,
         fig4_speedups,
@@ -26,7 +27,7 @@ def main() -> None:
     failures = 0
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
-                plan_compiler, collective_ir):
+                plan_compiler, collective_ir, fabric_probe):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

@@ -55,15 +55,24 @@ _EXPORTS = {
     "SolveBudget": "repro.plan",
     "DriftMonitor": "repro.plan",
     "fabric_fingerprint": "repro.plan",
+    # fabric subsystem
+    "Fabric": "repro.fabric",
+    "make_datacenter": "repro.fabric",
+    "make_tpu_fleet": "repro.fabric",
+    "scramble": "repro.fabric",
+    "ProbeResult": "repro.fabric",
+    "probe_fabric": "repro.fabric",
+    "cost_matrix": "repro.fabric",
+    "combine_cost": "repro.fabric",
+    "HierarchyModel": "repro.fabric",
+    "infer_hierarchy": "repro.fabric",
+    "SparseProbeResult": "repro.fabric",
+    "sparse_probe_fabric": "repro.fabric",
+    "refresh_sparse": "repro.fabric",
     # core pipeline
-    "Fabric": "repro.core",
-    "make_datacenter": "repro.core",
-    "make_tpu_fleet": "repro.core",
-    "scramble": "repro.core",
-    "ProbeResult": "repro.core",
-    "probe_fabric": "repro.core",
-    "cost_matrix": "repro.core",
     "optimize_rank_order": "repro.core",
+    "optimize_rank_order_hierarchical": "repro.core",
+    "hierarchical_perm": "repro.core",
     "optimize_mesh_assignment": "repro.core",
     "MeshPlan": "repro.core",
 }
@@ -72,16 +81,26 @@ __all__ = sorted(_EXPORTS) + ["__version__"]
 
 if TYPE_CHECKING:  # pragma: no cover - static analysis only
     from repro.core import (  # noqa: F401
-        Fabric,
         MeshPlan,
-        ProbeResult,
-        cost_matrix,
-        make_datacenter,
-        make_tpu_fleet,
+        hierarchical_perm,
         optimize_mesh_assignment,
         optimize_rank_order,
+        optimize_rank_order_hierarchical,
+    )
+    from repro.fabric import (  # noqa: F401
+        Fabric,
+        HierarchyModel,
+        ProbeResult,
+        SparseProbeResult,
+        combine_cost,
+        cost_matrix,
+        infer_hierarchy,
+        make_datacenter,
+        make_tpu_fleet,
         probe_fabric,
+        refresh_sparse,
         scramble,
+        sparse_probe_fabric,
     )
     from repro.plan import (  # noqa: F401
         CollectiveRequest,

@@ -49,6 +49,12 @@ def _add_session_args(ap: argparse.ArgumentParser) -> None:
                    help="relabel nodes (the cloud's random IP list)")
     g.add_argument("--fabric-seed", type=int, default=None)
     g.add_argument("--probe-seed", type=int, default=None)
+    g.add_argument("--probe-mode", default=None, choices=["dense", "sparse"],
+                   help="dense n^2 probing or budgeted sparse probing")
+    g.add_argument("--sparse", action="store_true", default=None,
+                   help="shorthand for --probe-mode sparse")
+    g.add_argument("--probe-budget", type=float, default=None,
+                   help="sparse probe budget as a fraction of n(n-1)")
     g.add_argument("--mesh", default=None, metavar="AxB[xC]",
                    help="N-D mesh shape, e.g. 8x8 or 2x16x16")
     g.add_argument("--axes", default=None, metavar="a,b",
@@ -95,8 +101,17 @@ def session_config_from_args(args: argparse.Namespace,
         fabric["seed"] = args.fabric_seed
     if fabric:
         updates["fabric"] = fabric
+    probe: Dict[str, Any] = {}
     if args.probe_seed is not None:
-        updates["probe"] = {"seed": args.probe_seed}
+        probe["seed"] = args.probe_seed
+    if getattr(args, "probe_mode", None) is not None:
+        probe["mode"] = args.probe_mode
+    if getattr(args, "sparse", None):
+        probe["mode"] = "sparse"
+    if getattr(args, "probe_budget", None) is not None:
+        probe["budget"] = args.probe_budget
+    if probe:
+        updates["probe"] = probe
     mesh: Dict[str, Any] = {}
     if args.mesh is not None:
         mesh["shape"] = args.mesh
@@ -163,6 +178,12 @@ def cmd_probe(args: argparse.Namespace) -> int:
               f"p50={np.percentile(off, 50) * 1e6:.1f}us "
               f"p90={np.percentile(off, 90) * 1e6:.1f}us "
               f"bw={'probed' if probe.bw is not None else 'n/a'}")
+        if getattr(probe, "probes_used", 0):
+            print(f"[probe] sparse: {probe.probes_used} directed probes "
+                  f"({probe.probe_fraction * 100:.1f}% of dense n(n-1), "
+                  f"budget {probe.probe_budget * 100:.0f}%)")
+        if s.hierarchy is not None:
+            print(s.hierarchy.describe())
         if args.out:
             payload = {
                 "n": probe.n,
@@ -172,6 +193,9 @@ def cmd_probe(args: argparse.Namespace) -> int:
                 "n_probes": probe.n_probes,
                 "percentile": probe.percentile,
             }
+            if s.hierarchy is not None:
+                payload["hierarchy"] = s.hierarchy.to_dict()
+                payload["probes_used"] = int(getattr(probe, "probes_used", 0))
             with open(args.out, "w") as f:
                 json.dump(payload, f)
             print(f"[probe] wrote {args.out}")
@@ -211,6 +235,12 @@ def cmd_plan(args: argparse.Namespace) -> int:
             print(f"  mesh {'x'.join(map(str, mp.assignment.shape))} "
                   f"cost {mp.baseline_cost:.5f} -> {mp.cost:.5f} "
                   f"({mp.baseline_cost / max(mp.cost, 1e-30):.2f}x)")
+        if plan.meta.get("hierarchy"):
+            from repro.fabric import HierarchyModel
+
+            tree = HierarchyModel.from_dict(plan.meta["hierarchy"])
+            for line in tree.describe().splitlines():
+                print(f"  {line}")
         if args.out:
             # an explicit --out is a user-requested artifact, written
             # even under --dry-run (which only skips the plan *store*)

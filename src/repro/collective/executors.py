@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core.cost_models import CostModel, make_cost_model
 from repro.core.simulator import simulate_rounds
-from repro.core.topology import Fabric
+from repro.fabric.topology import Fabric
 
 from .ir import Program
 

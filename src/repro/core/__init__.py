@@ -6,9 +6,9 @@ plan → apply → monitor — behind one declarative config.  The manual
 steps below remain supported for the paper mapping
 (examples/manual_pipeline.py)::
 
-    fabric  = topology.make_tpu_fleet(...)        # or a live cluster
-    probed  = probe.probe_fabric(fabric)          # §IV-B pairwise probing
-    c       = probe.cost_matrix(probed, S)        # c_{i,j}(S)
+    fabric  = repro.fabric.make_tpu_fleet(...)    # or a live cluster
+    probed  = repro.fabric.probe_fabric(fabric)   # §IV-B pairwise probing
+    c       = repro.fabric.cost_matrix(probed, S) # c_{i,j}(S)
     result  = reorder.optimize_rank_order(c, "ring", S)   # §IV-C solving
     plan    = reorder.optimize_mesh_assignment(c, (16, 16), ("data", "model"))
     mesh    = launch.mesh.make_production_mesh(plan=plan) # reordered Mesh
@@ -25,13 +25,23 @@ from .cost_models import (  # noqa: F401
     make_cost_model,
 )
 from .dynamic import AdaptiveReranker, StragglerDetector, bottleneck_swap  # noqa: F401
-from .probe import ProbeResult, cost_matrix, probe_fabric, probe_mesh_pairwise  # noqa: F401
+
+# probing + topology live in repro.fabric now; re-exported here (directly,
+# not via the warning repro.core.probe/topology shims) for compatibility
+from repro.fabric.probe import (  # noqa: F401
+    ProbeResult,
+    cost_matrix,
+    probe_fabric,
+    probe_mesh_pairwise,
+)
 from .reorder import (  # noqa: F401
     MeshPlan,
+    hierarchical_perm,
     mesh_axis_cost,
     mesh_total_cost,
     optimize_mesh_assignment,
     optimize_rank_order,
+    optimize_rank_order_hierarchical,
     random_assignment,
 )
 from .schedule import SCHEDULES, Flow  # noqa: F401
@@ -49,4 +59,9 @@ from .solver import (  # noqa: F401
     swap_hill_climb,
     two_opt,
 )
-from .topology import Fabric, make_datacenter, make_tpu_fleet, scramble  # noqa: F401
+from repro.fabric.topology import (  # noqa: F401
+    Fabric,
+    make_datacenter,
+    make_tpu_fleet,
+    scramble,
+)

@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from .schedule import Flow
-from .topology import Fabric
+from repro.fabric.topology import Fabric
 
 __all__ = ["simulate_rounds", "simulate_collective", "CollectiveSimulator"]
 

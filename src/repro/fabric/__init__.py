@@ -1,0 +1,55 @@
+"""repro.fabric — everything the system knows about the network fabric.
+
+One subsystem owns the fabric lifecycle end to end:
+
+* :mod:`~repro.fabric.topology` — synthetic fabrics (Clos datacenter,
+  TPU fleet) and the :class:`Fabric` artifact (moved from
+  ``repro.core.topology``, which remains as a deprecating shim);
+* :mod:`~repro.fabric.probe` — dense pairwise probing, paper §IV-B
+  (moved from ``repro.core.probe``, shim kept);
+* :mod:`~repro.fabric.costs` — the one shared c_{i,j}(S) formula;
+* :mod:`~repro.fabric.hierarchy` — locality-tree inference from a
+  probed cost matrix (agglomerative, automatic tier cut);
+* :mod:`~repro.fabric.sparse` — budgeted O(n·log n) probing that
+  reconstructs a plan-grade matrix from ≤25% of the dense probes, plus
+  the cluster-scoped drift refresh.
+
+See DESIGN.md §8 for the subsystem architecture and the migration map.
+"""
+
+from .costs import combine_cost  # noqa: F401
+from .hierarchy import HierarchyModel, infer_hierarchy  # noqa: F401
+from .probe import (  # noqa: F401
+    ProbeResult,
+    cost_matrix,
+    probe_fabric,
+    probe_mesh_pairwise,
+)
+from .sparse import (  # noqa: F401
+    SparseProbeResult,
+    refresh_sparse,
+    sparse_probe_fabric,
+)
+from .topology import (  # noqa: F401
+    Fabric,
+    make_datacenter,
+    make_tpu_fleet,
+    scramble,
+)
+
+__all__ = [
+    "Fabric",
+    "make_datacenter",
+    "make_tpu_fleet",
+    "scramble",
+    "ProbeResult",
+    "probe_fabric",
+    "probe_mesh_pairwise",
+    "cost_matrix",
+    "combine_cost",
+    "HierarchyModel",
+    "infer_hierarchy",
+    "SparseProbeResult",
+    "sparse_probe_fabric",
+    "refresh_sparse",
+]

@@ -49,10 +49,14 @@ from repro.collective import (
     kind_from_op,
 )
 from repro.core.cost_models import make_cost_model
-from repro.core.probe import ProbeResult
-from repro.core.reorder import MeshPlan, mesh_axis_cost, optimize_mesh_assignment
+from repro.core.reorder import (
+    MeshPlan,
+    hierarchical_perm,
+    mesh_axis_cost,
+    optimize_mesh_assignment,
+)
 from repro.core.solver import solve
-from repro.core.topology import Fabric
+from repro.fabric import Fabric, HierarchyModel, ProbeResult, combine_cost
 
 __all__ = [
     "CollectiveRequest",
@@ -331,6 +335,11 @@ class SolveBudget:
     #: forwarded to :func:`repro.core.solver.solve`
     engine: str = "vectorized"          # "vectorized" | "reference"
     backend: str = "numpy"              # "numpy" | "jax"
+    #: groups at least this large solve by hierarchy decomposition
+    #: (per-cluster then inter-cluster) when a recovered
+    #: :class:`repro.fabric.HierarchyModel` is available — the flat SA
+    #: search is the compile bottleneck at fleet scale
+    hierarchy_min_n: int = 48
 
 
 class PlanCompiler:
@@ -389,14 +398,25 @@ class PlanCompiler:
     def compile(self, probe, mix: JobMix,
                 mesh_shape: Optional[Sequence[int]] = None,
                 axis_names: Optional[Sequence[str]] = None,
-                fingerprint=None) -> Plan:
+                fingerprint=None,
+                hierarchy: Optional[HierarchyModel] = None) -> Plan:
+        """Compile the plan; ``hierarchy`` (or ``probe.hierarchy``, which
+        a :class:`repro.fabric.SparseProbeResult` carries) switches large
+        groups to hierarchy-decomposed solving and the fingerprint to the
+        tree sketch."""
         from .cache import fabric_fingerprint
 
         t0 = time.perf_counter()
         lat, bw = self._matrices(probe)
         n = lat.shape[0]
+        if hierarchy is None:
+            hierarchy = getattr(probe, "hierarchy", None)
+        if hierarchy is not None and hierarchy.n != n:
+            raise ValueError(
+                f"hierarchy covers {hierarchy.n} nodes but the probe has "
+                f"{n}; probe and hierarchy must describe the same fabric")
         if fingerprint is None:
-            fingerprint = fabric_fingerprint(lat, bw)
+            fingerprint = fabric_fingerprint(lat, bw, hierarchy=hierarchy)
 
         # Merge requests into (op, bucket, group) cells; the compile size
         # is the count-weighted geometric mean of the cell's sizes.
@@ -414,7 +434,7 @@ class PlanCompiler:
             repr_size = float(np.exp(np.average(np.log(np.maximum(s, 1.0)),
                                                 weights=np.maximum(w, 1e-9))))
             entries[(op, bucket, group)] = self._compile_entry(
-                op, bucket, group, repr_size, lat, bw)
+                op, bucket, group, repr_size, lat, bw, hierarchy)
 
         mesh_plan = None
         if mesh_shape is not None:
@@ -431,7 +451,8 @@ class PlanCompiler:
             np.fill_diagonal(c_mesh, 0.0)
             c_mesh = np.maximum(c_mesh, c_mesh.T)
             mesh_plan = optimize_mesh_assignment(
-                c_mesh, tuple(mesh_shape), axis_names, seed=self.seed)
+                c_mesh, tuple(mesh_shape), axis_names, seed=self.seed,
+                hierarchy=hierarchy)
             if mesh_plan.cost > mesh_plan.baseline_cost:
                 # the heuristic can lose to identity on tiny/uniform
                 # fabrics; a compiled plan must never ship a regression
@@ -454,11 +475,14 @@ class PlanCompiler:
                 "mix_name": mix.name,
                 "oracle": "simulator" if self.fabric is not None else "cost_model",
                 "budget": dataclasses.asdict(self.budget),
+                "hierarchy": hierarchy.to_dict() if hierarchy is not None
+                             else None,
             },
         )
 
     def _compile_entry(self, op: str, bucket: int, group: Tuple[int, ...],
-                       size_bytes: float, lat, bw) -> PlanEntry:
+                       size_bytes: float, lat, bw,
+                       hierarchy: Optional[HierarchyModel] = None) -> PlanEntry:
         g = np.asarray(group, dtype=np.int64)
         n_g = len(g)
         sub_lat = lat[np.ix_(g, g)]
@@ -467,6 +491,20 @@ class PlanCompiler:
         oracle_name = "simulator" if use_sim else "cost_model"
         executor = self._oracle(lat, bw) if use_sim else None
         coll_op = CollectiveOp(kind_from_op(op), size_bytes, group)
+
+        # Hierarchy decomposition: one locality-nested permutation per
+        # entry (solve per cluster, then inter-cluster over supernodes)
+        # replaces the per-algorithm flat SA search — the permutation is
+        # pure locality nesting, so every candidate algorithm scores the
+        # same one under its own cost model.
+        hier_local: Optional[np.ndarray] = None
+        if hierarchy is not None and not hierarchy.flat \
+                and n_g >= self.budget.hierarchy_min_n:
+            sub_h = hierarchy.restrict(group)
+            if not sub_h.flat:
+                hier_local = hierarchical_perm(
+                    combine_cost(sub_lat, sub_bw, size_bytes), sub_h,
+                    seed=self.seed)
 
         best = None          # (time, algo, akw, chunks, perm, mcost)
         identity_times: Dict[str, float] = {}
@@ -484,11 +522,15 @@ class PlanCompiler:
             # every candidate's rounds just to discard them dominates
             # large-fleet compiles (bcube at n=1024 is ~1M flows).
             base_prog = compile_op(coll_op, algo, **akw) if use_sim else None
-            solved = solve(model, method="auto", iters=self.budget.iters,
-                           chains=self.budget.chains, seed=self.seed,
-                           engine=self.budget.engine,
-                           backend=self.budget.backend)
-            for local in (identity_local, np.asarray(solved.perm)):
+            if hier_local is not None:
+                solved_local = hier_local
+            else:
+                solved = solve(model, method="auto", iters=self.budget.iters,
+                               chains=self.budget.chains, seed=self.seed,
+                               engine=self.budget.engine,
+                               backend=self.budget.backend)
+                solved_local = np.asarray(solved.perm)
+            for local in (identity_local, solved_local):
                 node_perm = g[local]
                 placed = apply_permutation(base_prog, node_perm) \
                     if use_sim else None

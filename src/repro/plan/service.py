@@ -57,7 +57,8 @@ class PlanningService:
                axis_names: Optional[Sequence[str]] = None) -> Future:
         """Plan future for (probe, mix); dedupes against in-flight work."""
         lat, bw = PlanCompiler._matrices(probe)
-        fp = fabric_fingerprint(lat, bw)
+        fp = fabric_fingerprint(lat, bw,
+                                hierarchy=getattr(probe, "hierarchy", None))
         request_key = mix.key() + _mesh_suffix(mesh_shape, axis_names)
         # The full lookup may scan the persistent store — keep that disk
         # I/O OUTSIDE the service lock (the cache locks itself) so
@@ -107,7 +108,8 @@ class PlanningService:
         groups: List[Tuple[object, object, List[int], List[JobMix]]] = []
         for i, (probe, mix) in enumerate(requests):
             lat, bw = PlanCompiler._matrices(probe)
-            fp = fabric_fingerprint(lat, bw)
+            fp = fabric_fingerprint(lat, bw,
+                                    hierarchy=getattr(probe, "hierarchy", None))
             for g in groups:
                 if fp.matches(g[1], self.cache.tol):
                     g[2].append(i)

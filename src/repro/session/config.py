@@ -85,13 +85,27 @@ class FabricConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ProbeConfig:
-    """Paper §IV-B probing parameters (see :func:`repro.core.probe_fabric`)."""
+    """Paper §IV-B probing parameters (see :func:`repro.fabric.probe_fabric`).
+
+    ``mode="sparse"`` switches to budgeted probing
+    (:func:`repro.fabric.sparse_probe_fabric`): ``budget`` of the dense
+    n(n-1) probes reconstructs a plan-grade cost matrix and recovers
+    the locality hierarchy, which the compiler then exploits.
+    """
 
     n_probes: int = 1000
     percentile: float = 10.0
     noise_scale: float = 0.3
     measure_bw: bool = True
     seed: int = 0
+    mode: str = "dense"                # "dense" | "sparse"
+    budget: float = 0.25               # sparse probe fraction of n(n-1)
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "sparse"):
+            raise ValueError(
+                f"ProbeConfig.mode must be 'dense' or 'sparse'; "
+                f"got {self.mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,7 +201,9 @@ def _dataclass_from_dict(cls: type, d: Mapping[str, Any], path: str) -> Any:
     kwargs: Dict[str, Any] = {}
     for name, value in d.items():
         f = fields[name]
-        if name == "budget":
+        # the solver's "budget" is a nested SolveBudget dataclass; the
+        # probe's "budget" is a plain float (sparse probe fraction)
+        if name == "budget" and cls is SolverConfig:
             kwargs[name] = value if isinstance(value, SolveBudget) else \
                 _dataclass_from_dict(SolveBudget, dict(value), f"{path}.{name}")
             continue

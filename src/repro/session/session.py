@@ -37,8 +37,18 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.probe import ProbeResult, cost_matrix, probe_fabric
-from repro.core.topology import Fabric, make_datacenter, make_tpu_fleet, scramble
+from repro.fabric import (
+    Fabric,
+    ProbeResult,
+    SparseProbeResult,
+    cost_matrix,
+    make_datacenter,
+    make_tpu_fleet,
+    probe_fabric,
+    refresh_sparse,
+    scramble,
+    sparse_probe_fabric,
+)
 from repro.plan import (
     DriftMonitor,
     DriftReport,
@@ -135,6 +145,10 @@ class Session:
         self._drift: Optional[DriftMonitor] = None
         self._monitor_thread: Optional[threading.Thread] = None
         self._monitor_stop = threading.Event()
+        #: the sparse poll's freshly refreshed probe, consumed by the
+        #: next _replan so a drift recompile keeps the hierarchy (and
+        #: does not re-spend the probe budget from scratch)
+        self._sparse_fresh: Optional[SparseProbeResult] = None
         self._patches: List[Tuple[Any, str, Any]] = []
         self._lock = threading.RLock()
 
@@ -185,17 +199,14 @@ class Session:
         if fabric is None and probe is None:
             fabric, probe = self._build_configured_fabric()
         elif probe is None:
-            probe = probe_fabric(
-                fabric, n_probes=cfg.probe.n_probes,
-                percentile=cfg.probe.percentile,
-                noise_scale=cfg.probe.noise_scale,
-                seed=cfg.probe.seed, measure_bw=cfg.probe.measure_bw)
+            probe = self._probe_fabric(fabric)
         with self._lock:
             self._fabric = fabric
             self._oracle_fabric = fabric
             self._probe = probe
             self._plan = None
             self._drift = None
+            self._sparse_fresh = None
             if self._service is not None:
                 self._service.close()
                 self._service = None
@@ -207,7 +218,7 @@ class Session:
         cfg = self.config
         f = cfg.fabric
         if f.kind == "live":
-            from repro.core.probe import probe_mesh_pairwise
+            from repro.fabric import probe_mesh_pairwise
 
             return None, probe_mesh_pairwise(percentile=cfg.probe.percentile)
         if f.kind == "tpu-fleet":
@@ -218,12 +229,20 @@ class Session:
             fabric = make_datacenter(f.nodes, seed=f.seed)
         if f.scramble_seed is not None:
             fabric, _ = scramble(fabric, seed=f.scramble_seed)
-        probe = probe_fabric(
-            fabric, n_probes=cfg.probe.n_probes,
-            percentile=cfg.probe.percentile,
-            noise_scale=cfg.probe.noise_scale,
-            seed=cfg.probe.seed, measure_bw=cfg.probe.measure_bw)
-        return fabric, probe
+        return fabric, self._probe_fabric(fabric)
+
+    def _probe_fabric(self, fabric: Fabric) -> ProbeResult:
+        """Probe per the configured mode: dense (paper §IV-B) or sparse
+        (budgeted O(n·log n) probing + hierarchy recovery)."""
+        p = self.config.probe
+        if p.mode == "sparse":
+            return sparse_probe_fabric(
+                fabric, budget=p.budget, n_probes=p.n_probes,
+                percentile=p.percentile, noise_scale=p.noise_scale,
+                seed=p.seed, measure_bw=p.measure_bw)
+        return probe_fabric(
+            fabric, n_probes=p.n_probes, percentile=p.percentile,
+            noise_scale=p.noise_scale, seed=p.seed, measure_bw=p.measure_bw)
 
     # -- lifecycle: plan ---------------------------------------------------
     @property
@@ -320,6 +339,13 @@ class Session:
     def mix(self) -> Optional[JobMix]:
         """The job mix of the current plan, or None before :meth:`plan`."""
         return self._mix
+
+    @property
+    def hierarchy(self):
+        """The recovered locality tree of the attached probe
+        (:class:`repro.fabric.HierarchyModel`), or None when the probe
+        carries none (dense mode / raw matrices)."""
+        return getattr(self._probe, "hierarchy", None)
 
     # -- lifecycle: apply --------------------------------------------------
     def apply(self, devices: Optional[Sequence] = None) -> AppliedPlan:
@@ -499,9 +525,20 @@ class Session:
         also switches to the analytic cost model: the attached fabric
         simulator predates the drift, so ranking candidates on it would
         ignore exactly the congestion that triggered the re-plan.
+
+        When the observation came from the sparse poll, the poll's
+        freshly refreshed :class:`SparseProbeResult` (separate lat/bw,
+        recovered hierarchy, landmark state) becomes the re-plan probe
+        instead: the recompile stays hierarchy-decomposed and keeps the
+        tree fingerprint, and the next poll tick resumes cluster
+        tracking from it rather than re-spending the probe budget.
         """
         old = self._plan
-        probe = ProbeResult(lat=observed, bw=None)
+        fresh, self._sparse_fresh = self._sparse_fresh, None
+        if fresh is not None and fresh.n == observed.shape[0]:
+            probe: ProbeResult = fresh
+        else:
+            probe = ProbeResult(lat=observed, bw=None)
         with self._lock:
             self._probe = probe
             self._oracle_fabric = None
@@ -557,9 +594,48 @@ class Session:
         t.start()
         return t
 
-    def _default_poll(self) -> Callable[[], np.ndarray]:
+    def _default_poll(self) -> Callable[[], Optional[np.ndarray]]:
         tick = {"n": 0}
         cfg = self.config
+        if cfg.probe.mode == "sparse" and \
+                isinstance(self._probe, SparseProbeResult):
+            # cluster-scoped monitoring: each tick re-probes every
+            # cluster's sentinel against the landmarks and fully
+            # re-probes ONLY the clusters that moved — a quiet fabric
+            # costs O(K·L) probes per tick, not n^2
+            state = {"probe": self._probe, "attached": self._probe}
+
+            def poll_sparse() -> Optional[np.ndarray]:
+                tick["n"] += 1
+                fab = self._fabric
+                if fab is None:          # re-attached onto a raw probe
+                    return None
+                if self._probe is not state["attached"]:
+                    # a re-attach replaced the probe mid-monitor: restart
+                    # cluster tracking from the session's current state
+                    # (a fresh sparse probe when the new one isn't sparse)
+                    state["attached"] = self._probe
+                    state["probe"] = self._probe \
+                        if isinstance(self._probe, SparseProbeResult) \
+                        else None
+                if state["probe"] is None or state["probe"].n != fab.n:
+                    state["probe"] = self._probe_fabric(fab)
+                    if not isinstance(state["probe"], SparseProbeResult):
+                        return cost_matrix(state["probe"],
+                                           cfg.payload_bytes)
+                refreshed, moved = refresh_sparse(
+                    fab, state["probe"],
+                    seed=cfg.probe.seed + tick["n"],
+                    percentile=cfg.probe.percentile,
+                    noise_scale=cfg.probe.noise_scale,
+                    measure_bw=cfg.probe.measure_bw)
+                state["probe"] = refreshed
+                if not moved:
+                    return None          # nothing moved: skip the tick
+                self._sparse_fresh = refreshed
+                return cost_matrix(refreshed, cfg.payload_bytes)
+
+            return poll_sparse
 
         def poll() -> np.ndarray:
             tick["n"] += 1

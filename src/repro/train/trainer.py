@@ -42,7 +42,7 @@ from repro.core import (
     optimize_mesh_assignment,
     probe_fabric,
 )
-from repro.core import probe as probe_mod
+from repro.fabric import probe as probe_mod
 from repro.core.reorder import MeshPlan
 
 __all__ = ["NodeFailure", "ClusterView", "TrainerConfig", "Trainer"]

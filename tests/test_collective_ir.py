@@ -46,7 +46,7 @@ from repro.collective import (
 )
 from repro.core import make_datacenter, make_cost_model, simulate_collective
 from repro.core import schedule as legacy
-from repro.core.probe import probe_fabric
+from repro.fabric import probe_fabric
 
 #: (builder, kind, kwargs, valid group sizes) — every registered seed
 #: algorithm in every kind it compiles

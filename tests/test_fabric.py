@@ -1,0 +1,421 @@
+"""repro.fabric subsystem: hierarchy inference, sparse probing, shims.
+
+Covers the PR-5 acceptance surface: planted-tier recovery on the
+synthetic fabrics (exact under zero probe noise, rank-correlated under
+multi-tenant noise), sparse-vs-dense budget and plan-quality
+properties, the deprecation shims at ``repro.core.topology`` /
+``repro.core.probe``, the shared cost helper, and probe-parameter
+validation.
+"""
+
+import importlib
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    mesh_axis_cost,
+    optimize_mesh_assignment,
+    optimize_rank_order,
+    optimize_rank_order_hierarchical,
+)
+from repro.fabric import (
+    HierarchyModel,
+    combine_cost,
+    cost_matrix,
+    infer_hierarchy,
+    make_datacenter,
+    make_tpu_fleet,
+    probe_fabric,
+    refresh_sparse,
+    scramble,
+    sparse_probe_fabric,
+)
+
+
+def _block_sets(blocks):
+    return sorted(tuple(sorted(b)) for b in blocks)
+
+
+# ---------------------------------------------------------------------------
+# hierarchy inference
+# ---------------------------------------------------------------------------
+
+def test_planted_racks_recovered_exactly():
+    """Zero probe noise: the finest tier must be exactly the racks."""
+    fab = make_datacenter(64, nodes_per_rack=8, seed=0)
+    h = infer_hierarchy(fab.cost_matrix(0.0))
+    racks = [tuple(range(r * 8, (r + 1) * 8)) for r in range(8)]
+    assert not h.flat
+    assert _block_sets(h.blocks(0)) == _block_sets(racks)
+
+
+def test_planted_pods_recovered_after_scramble():
+    """The tenant's scrambled labels must not hide the pod boundary."""
+    fleet = make_tpu_fleet(n_pods=2, pod_shape=(4, 4), seed=0)
+    scrambled, hidden = scramble(fleet, seed=3)
+    h = infer_hierarchy(scrambled.cost_matrix(0.0))
+    true_pods = _block_sets(
+        [np.nonzero(hidden < 16)[0].tolist(),
+         np.nonzero(hidden >= 16)[0].tolist()])
+    assert any(_block_sets(h.blocks(t)) == true_pods
+               for t in range(h.n_tiers))
+
+
+def test_hierarchy_rank_correlated_under_noise():
+    """Multi-tenant probe noise: recovered tier distance must rank-
+    correlate with the true physical tier distance."""
+    fab = make_datacenter(64, nodes_per_rack=8, seed=1)
+    probed = probe_fabric(fab, noise_scale=0.3, seed=2)
+    h = infer_hierarchy(cost_matrix(probed, 0.0))
+    assert not h.flat
+    rec = h.distance_ranks()
+    node = np.arange(64)
+    rack = node // 8
+    agg = rack // 4
+    true = (rack[:, None] != rack[None, :]).astype(int) + \
+           (agg[:, None] != agg[None, :]).astype(int)
+    off = ~np.eye(64, dtype=bool)
+    rx = np.argsort(np.argsort(rec[off]))
+    ry = np.argsort(np.argsort(true[off]))
+    rho = np.corrcoef(rx, ry)[0, 1]
+    assert rho > 0.6, rho
+
+
+def test_flat_hierarchy_on_uniform_matrix():
+    c = np.full((16, 16), 5e-6)
+    np.fill_diagonal(c, 0.0)
+    h = infer_hierarchy(c)
+    assert h.flat
+    assert h.blocks(0) == [[i] for i in range(16)]
+    assert (h.distance_ranks() == 0).all()
+
+
+def test_hierarchy_restrict_and_roundtrip():
+    fab = make_datacenter(32, nodes_per_rack=8, seed=0)
+    h = infer_hierarchy(fab.cost_matrix(0.0))
+    # JSON round-trip
+    h2 = HierarchyModel.from_dict(h.to_dict())
+    assert h2 == h
+    # restriction to two racks re-indexes to local ids
+    nodes = list(range(8)) + list(range(16, 24))
+    sub = h.restrict(nodes)
+    assert sub.n == 16
+    assert _block_sets(sub.blocks(0)) == _block_sets(
+        [tuple(range(8)), tuple(range(8, 16))])
+    with pytest.raises(ValueError):
+        h.restrict([0, 0, 1])
+
+
+def test_distance_ranks_ultrametric():
+    fab = make_datacenter(32, seed=4)
+    h = infer_hierarchy(fab.cost_matrix(0.0))
+    r = h.distance_ranks()
+    assert (r == r.T).all() and (np.diag(r) == 0).all()
+    # ultrametric: r[i,k] <= max(r[i,j], r[j,k])
+    assert (r[:, None, :] <= np.maximum(r[:, :, None],
+                                        r[None, :, :])).all()
+
+
+# ---------------------------------------------------------------------------
+# sparse probing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [0.25, 0.15])
+def test_sparse_budget_respected(budget):
+    fab, _ = scramble(make_datacenter(64, seed=0), seed=1)
+    sp = sparse_probe_fabric(fab, budget=budget, seed=0)
+    assert sp.probes_used <= budget * 64 * 63
+    assert sp.probe_fraction <= budget
+    assert sp.hierarchy is not None and not sp.hierarchy.flat
+    assert sp.observed is not None and sp.observed.any()
+
+
+def test_sparse_matrix_close_to_dense():
+    fab, _ = scramble(make_datacenter(64, seed=0), seed=1)
+    dn = probe_fabric(fab, seed=0)
+    sp = sparse_probe_fabric(fab, budget=0.25, seed=0)
+    off = ~np.eye(64, dtype=bool)
+    err = np.abs(np.log2(np.maximum(sp.lat[off], 1e-12) /
+                         np.maximum(dn.lat[off], 1e-12)))
+    assert np.median(err) < 0.5, np.median(err)
+    # bandwidth completed too, with the right symmetrization
+    assert sp.bw is not None
+    assert (sp.bw == sp.bw.T).all()
+    assert np.isinf(np.diag(sp.bw)).all()
+
+
+def test_sparse_plan_quality_close_to_dense():
+    """Property behind the BENCH_fabric acceptance bar: a sparse-probed
+    plan must stay within 5% of the dense-probed plan when both are
+    refereed by the contention-aware simulator (the \"real cloud\")."""
+    from repro.collective import (CollectiveOp, SimExecutor,
+                                  apply_permutation, chunk, compile_op,
+                                  kind_from_op)
+    from repro.plan import (CollectiveRequest, JobMix, PlanCompiler,
+                            SolveBudget)
+
+    mix = JobMix((
+        CollectiveRequest("all-reduce", 16e6),
+        CollectiveRequest("all-gather", 2e6, count=2.0),
+    ), name="t")
+
+    def sim_total(fab, plan):
+        ex = SimExecutor(fab)
+        total = 0.0
+        for r in mix.requests:
+            e = plan.lookup(r.op, r.size_bytes, r.group)
+            prog = chunk(apply_permutation(
+                compile_op(CollectiveOp(kind_from_op(e.op), e.size_bytes,
+                                        e.group),
+                           e.algo, **e.algo_kwargs), e.perm), e.chunks)
+            total += r.count * ex.estimate(prog)
+        return total
+
+    for fab in (make_datacenter(64, seed=0),
+                make_tpu_fleet(n_pods=2, pod_shape=(4, 8), seed=0)):
+        fab, _ = scramble(fab, seed=1)
+        comp = PlanCompiler(budget=SolveBudget(iters=200, chains=4), seed=0)
+        dense_plan = comp.compile(probe_fabric(fab, seed=0), mix)
+        sparse_plan = comp.compile(
+            sparse_probe_fabric(fab, budget=0.25, seed=0), mix)
+        td = sim_total(fab, dense_plan)
+        ts = sim_total(fab, sparse_plan)
+        assert ts <= 1.05 * td, (fab.meta["kind"], ts / td)
+
+
+def test_refresh_sparse_flags_only_moved_clusters():
+    fab = make_datacenter(64, nodes_per_rack=8, seed=0)
+    sp = sparse_probe_fabric(fab, budget=0.25, seed=0, noise_scale=0.05)
+    # quiet fabric: nothing moves, probes stay O(K * L)
+    quiet, moved = refresh_sparse(fab, sp, seed=1, noise_scale=0.05)
+    assert moved == []
+    assert quiet.probes_used < sp.probes_used
+    # congest one rack's uplink: x8 latency on every pair touching it
+    drifted = make_datacenter(64, nodes_per_rack=8, seed=0)
+    lat = drifted.lat.copy()
+    rack = list(range(8))
+    lat[rack, :] *= 8.0
+    lat[:, rack] *= 8.0
+    drifted.lat = lat
+    refreshed, moved = refresh_sparse(drifted, sp, seed=1, noise_scale=0.05)
+    lab = sp.hierarchy.labels(0)
+    moved_nodes = sorted(n for m in moved
+                         for n in np.nonzero(lab == m)[0].tolist())
+    assert set(rack) <= set(moved_nodes)
+    # the refreshed matrix reflects the drift
+    assert refreshed.lat[0, 9] > 2.0 * sp.lat[0, 9]
+
+
+def test_sparse_probe_validation():
+    fab = make_datacenter(16, seed=0)
+    with pytest.raises(ValueError, match="budget"):
+        sparse_probe_fabric(fab, budget=0.0)
+    with pytest.raises(ValueError, match="budget"):
+        sparse_probe_fabric(fab, budget=1.5)
+    with pytest.raises(ValueError, match="percentile"):
+        sparse_probe_fabric(fab, percentile=0.0)
+    with pytest.raises(ValueError, match="refresh_sparse"):
+        refresh_sparse(fab, probe_fabric(fab, seed=0))
+
+
+def test_sparse_budget_is_a_hard_cap_even_when_tiny():
+    """A budget barely above the spanning minimum caps the sweep at one
+    landmark and trims refinement (rings/medoid anchors last) — and an
+    impossible budget (below n-1 pairs) raises instead of silently
+    overshooting."""
+    fab = make_datacenter(100, seed=0)
+    sp = sparse_probe_fabric(fab, budget=0.025, seed=0)
+    assert sp.probes_used <= 0.025 * 100 * 99
+    with pytest.raises(ValueError, match="below the 99"):
+        sparse_probe_fabric(fab, budget=0.005)
+
+
+# ---------------------------------------------------------------------------
+# probe validation + shared cost helper (satellites)
+# ---------------------------------------------------------------------------
+
+def test_probe_fabric_validation():
+    fab = make_datacenter(8, seed=0)
+    with pytest.raises(ValueError, match="n_probes"):
+        probe_fabric(fab, n_probes=0)
+    with pytest.raises(ValueError, match="percentile"):
+        probe_fabric(fab, percentile=0.0)
+    with pytest.raises(ValueError, match="percentile"):
+        probe_fabric(fab, percentile=100.5)
+    with pytest.raises(ValueError, match="noise_scale"):
+        probe_fabric(fab, noise_scale=-0.1)
+    # the boundary values stay legal
+    probe_fabric(fab, n_probes=1, percentile=100.0, noise_scale=0.0)
+
+
+def test_cost_matrix_implementations_share_helper():
+    fab = make_datacenter(16, seed=2)
+    for s in (0.0, 4e6):
+        np.testing.assert_allclose(fab.cost_matrix(s),
+                                   combine_cost(fab.lat, fab.bw, s))
+    pr = probe_fabric(fab, seed=3)
+    for s in (0.0, 4e6):
+        np.testing.assert_allclose(cost_matrix(pr, s),
+                                   combine_cost(pr.lat, pr.bw, s))
+    with pytest.raises(ValueError, match="square"):
+        combine_cost(np.zeros((3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shim,name", [
+    ("repro.core.topology", "make_datacenter"),
+    ("repro.core.probe", "probe_fabric"),
+])
+def test_core_shims_warn_and_delegate(shim, name):
+    sys.modules.pop(shim, None)
+    with pytest.warns(DeprecationWarning, match="repro.fabric"):
+        mod = importlib.import_module(shim)
+    fabric_mod = importlib.import_module(
+        shim.replace("repro.core", "repro.fabric"))
+    assert getattr(mod, name) is getattr(fabric_mod, name)
+
+
+def test_repro_core_import_is_warning_free():
+    """`repro.core` (and the session stack) must not route through the
+    shims — CI runs the CLI under -W error::DeprecationWarning."""
+    for mod in ("repro.core", "repro.fabric", "repro.session", "repro.plan"):
+        sys.modules.pop(mod, None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        importlib.import_module("repro.core")
+        importlib.import_module("repro.session")
+
+
+# ---------------------------------------------------------------------------
+# hierarchy-decomposed solving
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_solve_matches_flat_quality():
+    fab, _ = scramble(make_datacenter(64, seed=5), seed=6)
+    c = cost_matrix(probe_fabric(fab, seed=7), 0.0)
+    h = infer_hierarchy(c)
+    flat = optimize_rank_order(c, "ring", iters=600, seed=0)
+    hier = optimize_rank_order_hierarchical(c, h, "ring")
+    assert hier.cost <= 1.10 * flat.cost, (hier.cost, flat.cost)
+    assert sorted(hier.perm.tolist()) == list(range(64))
+
+
+def test_hierarchical_solve_flat_fallback():
+    c = np.full((16, 16), 5e-6)
+    np.fill_diagonal(c, 0.0)
+    h = infer_hierarchy(c)
+    res = optimize_rank_order_hierarchical(c, h, "ring")
+    assert sorted(res.perm.tolist()) == list(range(16))
+
+
+def test_mesh_axis_cost_accepts_hierarchy_model():
+    fab = make_datacenter(16, nodes_per_rack=8, seed=0)
+    h = infer_hierarchy(fab.cost_matrix(0.0))
+    local = np.arange(16).reshape(2, 8)       # rows = racks
+    rng = np.random.default_rng(0)
+    shuffled = rng.permutation(16).reshape(2, 8)
+    c_local = mesh_axis_cost(local, h, axis=1)
+    c_shuf = mesh_axis_cost(shuffled, h, axis=1)
+    assert c_local <= c_shuf
+    assert c_local == 0.0                      # rack rings cross no tier
+
+
+def test_optimize_mesh_assignment_with_hierarchy():
+    fab, _ = scramble(make_datacenter(64, seed=8), seed=9)
+    c = cost_matrix(probe_fabric(fab, seed=10), 0.0)
+    h = infer_hierarchy(c)
+    plain = optimize_mesh_assignment(c, (8, 8), ("data", "model"), seed=0)
+    hier = optimize_mesh_assignment(c, (8, 8), ("data", "model"), seed=0,
+                                    hierarchy=h)
+    assert sorted(hier.assignment.reshape(-1).tolist()) == list(range(64))
+    assert hier.cost <= 1.10 * plain.cost
+    assert hier.cost <= hier.baseline_cost * 1.001
+
+
+# ---------------------------------------------------------------------------
+# tree fingerprints
+# ---------------------------------------------------------------------------
+
+def test_tree_fingerprint_stable_and_order_sensitive():
+    """Stability contract: a re-probe over the SAME probe structure
+    (what deterministic configs and the refresh_sparse drift path do)
+    must fuzzily match; a relabeled fabric must not."""
+    from repro.plan.cache import fabric_fingerprint
+
+    fab, _ = scramble(make_datacenter(32, seed=0), seed=1)
+    sp1 = sparse_probe_fabric(fab, budget=0.3, seed=0)
+    refreshed, _moved = refresh_sparse(fab, sp1, seed=5)
+    fp1 = fabric_fingerprint(sp1.lat, sp1.bw, hierarchy=sp1.hierarchy)
+    fp2 = fabric_fingerprint(refreshed.lat, refreshed.bw,
+                             hierarchy=refreshed.hierarchy)
+    assert fp1.digest.startswith("hfab")
+    assert fp1.matches(fp2)
+    # a relabeled fabric must NOT match (order sensitivity)
+    relabeled, _ = scramble(fab, seed=7)
+    sp3 = sparse_probe_fabric(relabeled, budget=0.3, seed=0)
+    fp3 = fabric_fingerprint(sp3.lat, sp3.bw, hierarchy=sp3.hierarchy)
+    assert not fp1.matches(fp3)
+    # tree and dense sketches live in different namespaces
+    dense_fp = fabric_fingerprint(sp1.lat, sp1.bw)
+    assert not fp1.matches(dense_fp)
+
+
+def test_session_sparse_mode_end_to_end():
+    from repro.session import Session, SessionConfig
+
+    cfg = SessionConfig.from_dict({
+        "fabric": {"kind": "datacenter", "nodes": 32, "scramble_seed": 1},
+        "probe": {"mode": "sparse", "budget": 0.25},
+        "solver": {"budget": {"iters": 150, "chains": 4,
+                              "hierarchy_min_n": 16}},
+    })
+    with Session(cfg) as s:
+        plan = s.plan()
+        assert s.hierarchy is not None and not s.hierarchy.flat
+        assert s.probe.probe_fraction <= 0.25
+        assert plan.meta.get("hierarchy")
+        assert plan.fingerprint.digest.startswith("hfab")
+
+
+def test_sparse_drift_replan_keeps_hierarchy():
+    """A drift re-plan triggered by the sparse poll must recompile from
+    the refreshed SparseProbeResult — keeping the hierarchy (and the
+    tree fingerprint) instead of falling back to flat solving."""
+    from repro.session import Session, SessionConfig
+
+    cfg = SessionConfig.from_dict({
+        "fabric": {"kind": "datacenter", "nodes": 24, "scramble_seed": 1},
+        "probe": {"mode": "sparse", "budget": 0.3, "noise_scale": 0.05},
+        "solver": {"budget": {"iters": 100, "chains": 2,
+                              "hierarchy_min_n": 16}},
+    })
+    with Session(cfg) as s:
+        plan1 = s.plan()
+        assert plan1.fingerprint.digest.startswith("hfab")
+        # global congestion: every cluster moves, the poll reports it
+        s._fabric.lat = s._fabric.lat * 6.0
+        poll = s._default_poll()
+        c = poll()
+        assert c is not None
+        s.observe(c)                      # auto_replan recompiles
+        plan2 = s.planned
+        assert plan2 is not plan1
+        assert s.hierarchy is not None and not s.hierarchy.flat
+        assert plan2.fingerprint.digest.startswith("hfab")
+
+
+def test_probe_config_validates_mode():
+    from repro.session import SessionConfig
+
+    with pytest.raises(ValueError, match="mode"):
+        SessionConfig.from_dict({"probe": {"mode": "turbo"}})
+    cfg = SessionConfig.from_dict({"probe": {"mode": "sparse",
+                                             "budget": "0.2"}})
+    assert cfg.probe.budget == pytest.approx(0.2)
+    assert SessionConfig.from_json(cfg.to_json()).probe.mode == "sparse"

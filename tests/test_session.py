@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import make_datacenter, probe_fabric, scramble
-from repro.core.probe import ProbeResult, cost_matrix
+from repro.fabric import ProbeResult, cost_matrix
 from repro.session import (
     AppliedPlan,
     Session,
