@@ -15,6 +15,7 @@ def main() -> None:
         collective_ir,
         e2e_training,
         fabric_probe,
+        faults_churn,
         fig1_distribution,
         fig2_heatmap,
         fig4_speedups,
@@ -27,7 +28,7 @@ def main() -> None:
     failures = 0
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
-                plan_compiler, collective_ir, fabric_probe):
+                plan_compiler, collective_ir, fabric_probe, faults_churn):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

@@ -69,6 +69,16 @@ _EXPORTS = {
     "SparseProbeResult": "repro.fabric",
     "sparse_probe_fabric": "repro.fabric",
     "refresh_sparse": "repro.fabric",
+    # faults + resilience
+    "FaultEvent": "repro.faults",
+    "FaultSchedule": "repro.faults",
+    "FaultyFabric": "repro.faults",
+    "ProbeTimeout": "repro.faults",
+    "RetryPolicy": "repro.faults",
+    "RetryError": "repro.faults",
+    "call_with_retries": "repro.faults",
+    "HealthTracker": "repro.faults",
+    "recover_plan": "repro.faults",
     # core pipeline
     "optimize_rank_order": "repro.core",
     "optimize_rank_order_hierarchical": "repro.core",

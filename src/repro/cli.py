@@ -374,15 +374,86 @@ def cmd_serve(args: argparse.Namespace) -> int:
 # bench
 # ---------------------------------------------------------------------------
 
+def cmd_bench_faults(args: argparse.Namespace) -> int:
+    """Seeded churn scenario: preempt 25% of the nodes mid-session, let
+    the degradation ladder recover, referee the recovered order against
+    identity, and rejoin the preempted nodes.  Fails (exit 1) if any
+    recovery raises, loses the plan, or serves an order the cost model
+    scores worse than identity."""
+    from repro.faults import FaultSchedule, FaultyFabric
+    from repro.fabric import make_datacenter, scramble
+    from repro.session import Session
+
+    n = 16 if args.smoke else 32
+    iters = 200 if args.smoke else 400
+    fab, _ = scramble(make_datacenter(n, seed=0), seed=1)
+    schedule = FaultSchedule.generate(
+        n, ticks=8, seed=args.seed, preempt_frac=0.25,
+        timeout_rate=0.0, drop_rate=0.0, nan_rate=0.0)
+    faulty = FaultyFabric(fab, schedule)
+    cfg = session_config_from_args(args).replace(
+        mesh={"shape": ()}, cache={"dir": None},
+        probe={"n_probes": 4},
+        solver={"budget": {"iters": iters, "chains": 4}})
+    events: List[Dict[str, Any]] = []
+    with Session(cfg) as s:
+        s.attach(fab)
+        s.plan()
+        for _ in range(8):
+            for ev in faulty.advance():
+                t0 = time.perf_counter()
+                if ev.kind == "node_preempt":
+                    alive = s.alive
+                    plan = s.on_node_leave(
+                        [alive.index(b) for b in ev.nodes if b in alive])
+                else:
+                    plan = s.on_node_join(
+                        [b for b in ev.nodes if b not in s.alive])
+                ms = (time.perf_counter() - t0) * 1e3
+                ok = plan is not None and all(
+                    e.expected_time <= e.best_identity_time * (1 + 1e-9)
+                    and sorted(e.perm) == list(e.group)
+                    for e in plan.entries.values())
+                events.append({
+                    "kind": ev.kind, "survivors": len(s.alive),
+                    "recovery_ms": round(ms, 2),
+                    "rungs": sorted(set(
+                        (plan.meta.get("rungs") or {}).values()))
+                    if plan is not None else [],
+                    "ok": ok,
+                })
+                print(f"bench_faults,{ev.kind},{ms * 1e3:.0f},"
+                      f"survivors={len(s.alive)}")
+        health = s.health
+    payload = {"bench": "session_faults", "smoke": bool(args.smoke),
+               "n": n, "seed": args.seed, "health": health,
+               "events": events}
+    print(json.dumps(payload, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {args.out}")
+    if not events or not all(e["ok"] for e in events):
+        print("[bench] FAIL: a churn recovery lost the plan or served "
+              "an order worse than identity")
+        return 1
+    return 0
+
+
 def cmd_bench(args: argparse.Namespace) -> int:
     """Self-contained plan-pipeline benchmark (CI smoke + local sanity).
 
     Times, per fabric size: cold compile, warm cache hit, and the plan's
     expected speedup over the identity order — through the same Session
     facade applications use.
+
+    ``--scenario faults`` switches to the churn/recovery scenario
+    (:func:`cmd_bench_faults`).
     """
     from repro.session import Session
 
+    if getattr(args, "scenario", "plan") == "faults":
+        return cmd_bench_faults(args)
     sizes = [16] if args.smoke else [32, 64]
     iters = 200 if args.smoke else 800
     results: List[Dict[str, Any]] = []
@@ -486,6 +557,11 @@ def build_parser() -> argparse.ArgumentParser:
     _add_session_args(p)
     p.add_argument("--smoke", action="store_true",
                    help="one small fabric (CI)")
+    p.add_argument("--scenario", default="plan", choices=["plan", "faults"],
+                   help="plan: compile/cache pipeline; faults: seeded "
+                        "churn with ladder recovery")
+    p.add_argument("--seed", type=int, default=0,
+                   help="fault-schedule seed (faults scenario)")
     p.add_argument("--out", default=None, help="write bench JSON here")
     p.set_defaults(fn=cmd_bench)
 

@@ -91,7 +91,29 @@ class AdaptiveReranker:
     history: List[Tuple[float, float, bool]] = dataclasses.field(default_factory=list)
 
     def update(self, cost_matrix: np.ndarray) -> Tuple[np.ndarray, bool]:
-        model = self.model_factory(cost_matrix)
+        c = np.asarray(cost_matrix, dtype=np.float64)
+        n = len(self.perm)
+        if c.ndim != 2 or c.shape[0] != c.shape[1]:
+            raise ValueError(
+                f"AdaptiveReranker.update cost_matrix must be a square "
+                f"[n, n] matrix; got shape {c.shape}")
+        if c.shape[0] != n:
+            raise ValueError(
+                f"AdaptiveReranker.update cost_matrix covers {c.shape[0]} "
+                f"nodes but the tracked permutation covers {n}")
+        if np.isnan(c).any():
+            raise ValueError(
+                f"AdaptiveReranker.update cost_matrix contains "
+                f"{int(np.isnan(c).sum())} NaN entries; a corrupted probe "
+                f"sample must be dropped upstream, not fed into the "
+                f"re-rank objective")
+        if (c < 0).any():
+            i, j = np.argwhere(c < 0)[0]
+            raise ValueError(
+                f"AdaptiveReranker.update cost_matrix contains negative "
+                f"entries (first at [{i}, {j}] = {c[i, j]}); costs are "
+                f"times and must be >= 0")
+        model = self.model_factory(c)
         cur = model.cost(self.perm)
         if self.reference_cost is None:
             self.reference_cost = cur

@@ -42,6 +42,37 @@ class ProbeResult:
     def n(self) -> int:
         return self.lat.shape[0]
 
+    def subset(self, nodes: Sequence[int]) -> "ProbeResult":
+        """Measurements restricted to ``nodes`` (elastic membership).
+
+        Mirrors :meth:`Fabric.subset`: ``nodes[k]`` becomes local id
+        ``k``, and the same validation applies — a wrong survivor list
+        fails loudly here, not as an index error inside a solver.
+        """
+        idx = _validate_subset(nodes, self.n, type(self).__name__)
+        return ProbeResult(
+            lat=self.lat[np.ix_(idx, idx)].copy(),
+            bw=None if self.bw is None
+            else self.bw[np.ix_(idx, idx)].copy(),
+            n_probes=self.n_probes, percentile=self.percentile)
+
+
+def _validate_subset(nodes: Sequence[int], n: int, owner: str) -> np.ndarray:
+    nodes = [int(x) for x in nodes]
+    if not nodes:
+        raise ValueError(
+            f"{owner}.subset needs at least one node; got an empty list")
+    bad = [x for x in nodes if x < 0 or x >= n]
+    if bad:
+        raise ValueError(
+            f"{owner}.subset node ids {bad} out of range for {n} nodes "
+            f"(valid ids: 0..{n - 1})")
+    if len(set(nodes)) != len(nodes):
+        dups = sorted({x for x in nodes if nodes.count(x) > 1})
+        raise ValueError(
+            f"{owner}.subset node ids must be unique; duplicates: {dups}")
+    return np.asarray(nodes, dtype=np.int64)
+
 
 def probe_fabric(
     fabric: Fabric,

@@ -73,6 +73,34 @@ class SparseProbeResult(ProbeResult):
         n = self.n
         return self.probes_used / max(n * (n - 1), 1)
 
+    def subset(self, nodes: Sequence[int]) -> "SparseProbeResult":
+        """Restriction to ``nodes``, sparse artifacts included.
+
+        The hierarchy is put through
+        :meth:`~repro.fabric.hierarchy.HierarchyModel.restrict` (same
+        local re-indexing), the observed mask is sliced, and landmarks
+        keep only surviving nodes (remapped) — so
+        :func:`refresh_sparse` keeps tracking clusters across an
+        elastic membership change instead of restarting from scratch.
+        """
+        from .probe import _validate_subset
+
+        idx = _validate_subset(nodes, self.n, type(self).__name__)
+        members = [int(x) for x in idx]
+        local = {node: k for k, node in enumerate(members)}
+        return SparseProbeResult(
+            lat=self.lat[np.ix_(idx, idx)].copy(),
+            bw=None if self.bw is None
+            else self.bw[np.ix_(idx, idx)].copy(),
+            n_probes=self.n_probes, percentile=self.percentile,
+            hierarchy=None if self.hierarchy is None
+            else self.hierarchy.restrict(members),
+            probes_used=self.probes_used, probe_budget=self.probe_budget,
+            observed=None if self.observed is None
+            else self.observed[np.ix_(idx, idx)].copy(),
+            landmarks=tuple(local[x] for x in self.landmarks
+                            if x in local))
+
 
 # ---------------------------------------------------------------------------
 # pair measurement (shared noise model with probe_fabric)

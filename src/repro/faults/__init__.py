@@ -1,0 +1,58 @@
+"""repro.faults — deterministic fault injection and session resilience.
+
+Cloud fabrics are volatile by construction: probes time out under
+noisy-neighbor interference, links degrade for minutes at a time,
+preemptible VMs vanish mid-job.  This package makes that volatility a
+first-class, *seeded* test dimension and gives sessions the machinery
+to survive it:
+
+* :mod:`repro.faults.inject` — :class:`FaultSchedule` (a deterministic
+  timeline of fault events) and :class:`FaultyFabric` (a duck-typed
+  fabric wrapper that applies the schedule to any probe path without
+  touching callers);
+* :mod:`repro.faults.retry` — :class:`RetryPolicy` capped exponential
+  backoff with seeded jitter, shared by the probe, re-plan, and monitor
+  paths;
+* :mod:`repro.faults.health` — the ``healthy → degraded → halted``
+  session health state machine;
+* :mod:`repro.faults.ladder` — the graceful-degradation ladder
+  (warm-start re-solve → bottleneck hot-patch → stale plan → identity
+  order) and elastic-membership plan recovery.
+"""
+
+from repro.faults.health import HEALTH_STATES, HealthTracker
+from repro.faults.inject import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultSchedule,
+    FaultyFabric,
+    ProbeTimeout,
+)
+from repro.faults.ladder import (
+    LADDER_RUNGS,
+    identity_fallback,
+    recover_entry,
+    recover_plan,
+    restrict_perm,
+    warm_refine,
+)
+from repro.faults.retry import RetryError, RetryPolicy, call_with_retries
+
+__all__ = [
+    "FAULT_KINDS",
+    "HEALTH_STATES",
+    "LADDER_RUNGS",
+    "FaultEvent",
+    "FaultSchedule",
+    "FaultyFabric",
+    "HealthTracker",
+    "ProbeTimeout",
+    "RetryError",
+    "RetryPolicy",
+    "call_with_retries",
+    "identity_fallback",
+    "recover_entry",
+    "recover_plan",
+    "restrict_perm",
+    "warm_refine",
+]

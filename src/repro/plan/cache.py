@@ -35,6 +35,7 @@ import hashlib
 import json
 import os
 import threading
+import warnings
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -335,6 +336,22 @@ class PlanCache:
             f"{fingerprint.digest}-{_sketch_tag(fingerprint)}"
             f"__{_request_tag(request_key)}.json")
 
+    def _quarantine(self, fname: str, error: Exception) -> None:
+        """Rename an unreadable store file to ``*.corrupt`` (skipped by
+        every future scan) instead of re-parsing — and re-failing — it
+        on every lookup.  A truncated write (a crashed process, a full
+        disk) must cost one warning, not poison ``get()`` forever."""
+        path = os.path.join(self.store_dir, fname)
+        try:
+            os.replace(path, path + ".corrupt")
+            note = f"quarantined as {fname}.corrupt"
+        except OSError as rename_err:
+            note = f"quarantine rename failed: {rename_err}"
+        warnings.warn(
+            f"plan cache store file {fname} is corrupted "
+            f"({type(error).__name__}: {error}); {note}",
+            RuntimeWarning, stacklevel=3)
+
     def _store_index(self) -> List[Tuple[str, Optional[FabricFingerprint],
                                          Optional[str]]]:
         if not self.store_dir or not os.path.isdir(self.store_dir):
@@ -349,8 +366,8 @@ class PlanCache:
                 fp = FabricFingerprint.from_dict(d["fingerprint"])
                 rk = str(d.get("mix_key", ""))
                 out.append((fname, fp, rk))
-            except (OSError, ValueError, KeyError):
-                out.append((fname, None, None))
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                self._quarantine(fname, e)
         return out
 
     def _load_from_store(self, fingerprint: FabricFingerprint,
@@ -364,7 +381,8 @@ class PlanCache:
             try:
                 with open(os.path.join(self.store_dir, fname)) as f:
                     plan = Plan.from_json(f.read())
-            except (OSError, ValueError, KeyError):
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                self._quarantine(fname, e)
                 continue
             if fingerprint.matches(plan.fingerprint, self.tol):
                 return plan
@@ -430,8 +448,35 @@ class DriftMonitor:
         return make
 
     def observe(self, cost_matrix: np.ndarray) -> DriftReport:
-        """Feed a refreshed full-fabric cost matrix; see class docstring."""
+        """Feed a refreshed full-fabric cost matrix; see class docstring.
+
+        Rejects malformed observations with :class:`ValueError` — a NaN
+        from a corrupted probe sample fed into the rerankers would
+        silently poison every solver delta downstream.
+        """
         c = np.asarray(cost_matrix, dtype=np.float64)
+        if c.ndim != 2 or c.shape[0] != c.shape[1]:
+            raise ValueError(
+                f"DriftMonitor.observe cost_matrix must be a square "
+                f"[n, n] matrix; got shape {c.shape}")
+        if c.shape[0] != self.plan.n:
+            raise ValueError(
+                f"DriftMonitor.observe cost_matrix covers {c.shape[0]} "
+                f"nodes but the plan covers {self.plan.n}; after an "
+                f"elastic membership change, rebuild the monitor from "
+                f"the recovered plan")
+        if np.isnan(c).any():
+            bad = int(np.isnan(c).sum())
+            raise ValueError(
+                f"DriftMonitor.observe cost_matrix contains {bad} NaN "
+                f"entr{'y' if bad == 1 else 'ies'}; drop or re-probe the "
+                f"corrupted samples before observing")
+        if (c < 0).any():
+            i, j = np.argwhere(c < 0)[0]
+            raise ValueError(
+                f"DriftMonitor.observe cost_matrix contains negative "
+                f"entries (first at [{i}, {j}] = {c[i, j]}); costs are "
+                f"times and must be >= 0")
         degraded: List[EntryKey] = []
         repaired: Dict[EntryKey, Tuple[int, ...]] = {}
         for key, rr in self._rerankers.items():

@@ -24,6 +24,8 @@ import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.faults.retry import RetryPolicy, call_with_retries
+
 from .cache import PlanCache, fabric_fingerprint
 from .compiler import JobMix, Plan, PlanCompiler
 
@@ -40,9 +42,14 @@ class PlanningService:
     """Concurrent front-end over a :class:`PlanCompiler` + :class:`PlanCache`."""
 
     def __init__(self, compiler: PlanCompiler,
-                 cache: Optional[PlanCache] = None, max_workers: int = 2):
+                 cache: Optional[PlanCache] = None, max_workers: int = 2,
+                 retry: Optional[RetryPolicy] = None):
         self.compiler = compiler
         self.cache = cache if cache is not None else PlanCache()
+        #: when set, compiles transiently failing (a flaky probe feeding
+        #: NaNs, a racing re-attach) are retried under capped backoff
+        #: before the failure reaches the consumer's future
+        self.retry = retry
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="repro-plan")
         self._lock = threading.Lock()
@@ -146,9 +153,15 @@ class PlanningService:
     def _compile(self, key, fp, probe, mix, mesh_shape, axis_names,
                  request_key) -> Plan:
         try:
-            plan = self.compiler.compile(
-                probe, mix, mesh_shape=mesh_shape, axis_names=axis_names,
-                fingerprint=fp)
+            def compile_once() -> Plan:
+                return self.compiler.compile(
+                    probe, mix, mesh_shape=mesh_shape, axis_names=axis_names,
+                    fingerprint=fp)
+
+            if self.retry is not None:
+                plan = call_with_retries(compile_once, self.retry)
+            else:
+                plan = compile_once()
             with self._lock:
                 self.stats["compiles"] += 1
             self.cache.put(plan, request_key)

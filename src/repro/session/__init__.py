@@ -20,6 +20,7 @@ from .config import (  # noqa: F401
     FabricConfig,
     MeshConfig,
     ProbeConfig,
+    RetryPolicy,
     SessionConfig,
     SolverConfig,
 )

@@ -11,6 +11,8 @@ Every knob that was previously hand-threaded through ``core`` / ``plan``
 * :class:`CacheConfig` — plan-cache directory / capacity / fuzzy-match
   tolerance;
 * :class:`DriftConfig` — drift threshold and re-plan policy;
+* :class:`repro.faults.RetryPolicy` — probe/re-plan backoff and the
+  monitor's degraded/halted health thresholds (the ``retry`` section);
 * :class:`MeshConfig` — N-D mesh shape + axis names.
 
 The tree round-trips through plain dicts (:meth:`SessionConfig.to_dict`
@@ -28,6 +30,7 @@ import json
 import os
 from typing import Any, Dict, Mapping, Optional, Tuple
 
+from repro.faults.retry import RetryPolicy
 from repro.plan.cache import DEFAULT_TOL
 from repro.plan.compiler import SolveBudget
 
@@ -38,6 +41,7 @@ __all__ = [
     "CacheConfig",
     "DriftConfig",
     "MeshConfig",
+    "RetryPolicy",
     "SessionConfig",
 ]
 
@@ -159,6 +163,7 @@ _SECTIONS: Dict[str, type] = {
     "solver": SolverConfig,
     "cache": CacheConfig,
     "drift": DriftConfig,
+    "retry": RetryPolicy,
     "mesh": MeshConfig,
 }
 
@@ -227,6 +232,7 @@ class SessionConfig:
     solver: SolverConfig = dataclasses.field(default_factory=SolverConfig)
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
     #: dominant collective payload of the workload (bytes)
     payload_bytes: float = 4e6

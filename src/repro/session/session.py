@@ -49,6 +49,12 @@ from repro.fabric import (
     scramble,
     sparse_probe_fabric,
 )
+from repro.faults import (
+    HealthTracker,
+    call_with_retries,
+    identity_fallback,
+    recover_plan,
+)
 from repro.plan import (
     DriftMonitor,
     DriftReport,
@@ -64,8 +70,11 @@ from .mixes import default_mix
 
 __all__ = ["Session", "SessionError", "AppliedPlan", "EVENTS"]
 
-#: lifecycle hook names accepted by :meth:`Session.on`
-EVENTS = ("attach", "plan", "apply", "drift", "replan", "close")
+#: lifecycle hook names accepted by :meth:`Session.on`; ``degraded`` /
+#: ``recovered`` report health-state edges, ``node_leave`` /
+#: ``node_join`` report elastic membership changes
+EVENTS = ("attach", "plan", "apply", "drift", "replan",
+          "degraded", "recovered", "node_leave", "node_join", "close")
 
 _STATES = ("created", "attached", "planned", "applied", "closed")
 
@@ -151,6 +160,17 @@ class Session:
         self._sparse_fresh: Optional[SparseProbeResult] = None
         self._patches: List[Tuple[Any, str, Any]] = []
         self._lock = threading.RLock()
+        #: healthy → degraded → halted (thresholds from the retry policy)
+        self._health = HealthTracker(
+            failure_threshold=self.config.retry.failure_threshold,
+            halt_threshold=self.config.retry.halt_threshold)
+        #: the fabric as first attached — the topology elastic membership
+        #: subsets (None when attached from a bare probe / live fleet)
+        self._base_fabric: Optional[Fabric] = None
+        #: currently-live node ids in the attached numbering; index k of
+        #: the current probe/plan is node _alive[k] of the attach-time
+        #: fabric (None before attach)
+        self._alive: Optional[List[int]] = None
 
     # -- context management ------------------------------------------------
     def __enter__(self) -> "Session":
@@ -207,6 +227,9 @@ class Session:
             self._plan = None
             self._drift = None
             self._sparse_fresh = None
+            self._base_fabric = fabric
+            self._alive = list(range(probe.n))
+            self._health.reset()
             if self._service is not None:
                 self._service.close()
                 self._service = None
@@ -233,16 +256,27 @@ class Session:
 
     def _probe_fabric(self, fabric: Fabric) -> ProbeResult:
         """Probe per the configured mode: dense (paper §IV-B) or sparse
-        (budgeted O(n·log n) probing + hierarchy recovery)."""
+        (budgeted O(n·log n) probing + hierarchy recovery).
+
+        Runs under the session retry policy: a transient probe failure
+        (an injected :class:`repro.faults.ProbeTimeout`, a wedged
+        sweep) is retried with capped backoff before it surfaces.
+        """
         p = self.config.probe
-        if p.mode == "sparse":
-            return sparse_probe_fabric(
-                fabric, budget=p.budget, n_probes=p.n_probes,
-                percentile=p.percentile, noise_scale=p.noise_scale,
-                seed=p.seed, measure_bw=p.measure_bw)
-        return probe_fabric(
-            fabric, n_probes=p.n_probes, percentile=p.percentile,
-            noise_scale=p.noise_scale, seed=p.seed, measure_bw=p.measure_bw)
+
+        def sweep() -> ProbeResult:
+            if p.mode == "sparse":
+                return sparse_probe_fabric(
+                    fabric, budget=p.budget, n_probes=p.n_probes,
+                    percentile=p.percentile, noise_scale=p.noise_scale,
+                    seed=p.seed, measure_bw=p.measure_bw)
+            return probe_fabric(
+                fabric, n_probes=p.n_probes, percentile=p.percentile,
+                noise_scale=p.noise_scale, seed=p.seed,
+                measure_bw=p.measure_bw)
+
+        return call_with_retries(sweep, self.config.retry,
+                                 sleep=self._monitor_stop.wait)
 
     # -- lifecycle: plan ---------------------------------------------------
     @property
@@ -270,7 +304,7 @@ class Session:
                     PlanCompiler(fabric=self._oracle_fabric,
                                  budget=cfg.solver.budget,
                                  seed=cfg.solver.seed),
-                    cache)
+                    cache, retry=cfg.retry)
             return self._service
 
     def plan(self, mix: Optional[JobMix] = None,
@@ -346,6 +380,21 @@ class Session:
         (:class:`repro.fabric.HierarchyModel`), or None when the probe
         carries none (dense mode / raw matrices)."""
         return getattr(self._probe, "hierarchy", None)
+
+    @property
+    def health(self) -> str:
+        """Current health state: ``healthy`` / ``degraded`` / ``halted``."""
+        return self._health.state
+
+    @property
+    def health_tracker(self) -> HealthTracker:
+        """The underlying tracker (transition log, counters, reset)."""
+        return self._health
+
+    @property
+    def alive(self) -> Optional[List[int]]:
+        """Live node ids in the attach-time numbering (None pre-attach)."""
+        return None if self._alive is None else list(self._alive)
 
     # -- lifecycle: apply --------------------------------------------------
     def apply(self, devices: Optional[Sequence] = None) -> AppliedPlan:
@@ -558,6 +607,19 @@ class Session:
         tick); the default re-probes the attached synthetic fabric with
         a rotating seed.  The thread is a daemon and stops at
         :meth:`close`.
+
+        Tick failures (a timed-out probe, a recompile racing a
+        re-attach) are governed by the session retry policy instead of
+        a bare warning per failure: consecutive failures back off
+        exponentially (capped, jittered — a flapping probe cannot spin
+        the thread hot), cross ``retry.failure_threshold`` and the
+        session enters ``degraded`` (firing the ``degraded`` hook while
+        continuing to serve the last good plan), cross
+        ``retry.halt_threshold`` and it enters ``halted``: the plan is
+        pinned to identity order — the one order that needs no fresh
+        fabric knowledge — and the monitor stops burning probes.  A
+        clean tick from ``degraded`` fires ``recovered``.  No exception
+        ever escapes the monitor thread.
         """
         self._require_open("monitor")
         if self._plan is None:
@@ -573,26 +635,68 @@ class Session:
                     "poll= for live fleets")
             poll = self._default_poll()
         self._monitor_stop.clear()
+        policy = self.config.retry
+        rng = np.random.default_rng(policy.seed)
+
+        def tick() -> None:
+            c = poll()
+            if c is not None and self.state != "closed" \
+                    and self._drift is not None:
+                self.observe(c)
 
         def loop() -> None:
             while not self._monitor_stop.wait(interval):
-                # a failed probe, a re-attach racing the tick (drift
-                # monitor reset), or a failed recompile must not kill
-                # the monitor thread
+                if self._health.state == "halted":
+                    return
                 try:
-                    c = poll()
-                    if c is not None and self.state != "closed" \
-                            and self._drift is not None:
-                        self.observe(c)
+                    tick()
                 except Exception as e:
-                    warnings.warn(f"session monitor tick failed: {e}",
-                                  RuntimeWarning, stacklevel=2)
+                    entered = self._health.record_failure(repr(e))
+                    if entered == "degraded":
+                        self._safe_fire("degraded", state="degraded",
+                                        reason=repr(e))
+                    elif entered == "halted":
+                        self._halt(repr(e))
+                        return
+                    # capped, jittered backoff between consecutive
+                    # failures; close() interrupts it immediately
+                    backoff = policy.delay(
+                        self._health.consecutive_failures, rng)
+                    if backoff > 0.0 and self._monitor_stop.wait(backoff):
+                        return
+                else:
+                    if self._health.record_success() == "healthy":
+                        self._safe_fire("recovered", state="healthy")
 
         t = threading.Thread(target=loop, daemon=True,
                              name=f"repro-session-monitor-{self.config.name}")
         self._monitor_thread = t
         t.start()
         return t
+
+    def _safe_fire(self, event: str, **info: Any) -> None:
+        """Fire hooks from the monitor thread; a raising hook is reported
+        as a warning, never an escaping exception."""
+        try:
+            self._fire(event, **info)
+        except Exception as e:
+            warnings.warn(
+                f"session {event!r} hook raised {e!r}; monitor continues",
+                RuntimeWarning, stacklevel=2)
+
+    def _halt(self, reason: str) -> None:
+        """Bottom of the degradation ladder: pin identity order.
+
+        Probing has failed ``retry.halt_threshold`` consecutive times —
+        whatever the plan believes about the fabric is stale beyond
+        repair, and identity order is the one order that is never worse
+        than identity.  Only :meth:`HealthTracker.reset` (or a
+        re-attach) returns the session to service.
+        """
+        with self._lock:
+            if self._plan is not None:
+                identity_fallback(self._plan)
+        self._safe_fire("degraded", state="halted", reason=reason)
 
     def _default_poll(self) -> Callable[[], Optional[np.ndarray]]:
         tick = {"n": 0}
@@ -648,6 +752,163 @@ class Session:
             return cost_matrix(probed, cfg.payload_bytes)
 
         return poll
+
+    # -- elastic membership ------------------------------------------------
+    def on_node_leave(self, nodes: Sequence[int]) -> Optional[Plan]:
+        """Handle departed nodes (preemption, failure) without recompiling.
+
+        ``nodes`` are rank ids in the *current* numbering.  The fabric
+        and probe are restricted to the survivors (``Fabric.subset`` /
+        ``ProbeResult.subset``, which also restricts the recovered
+        hierarchy), and every cached plan entry is warm-recovered onto
+        the surviving ranks through the degradation ladder
+        (:func:`repro.faults.recover_plan`): the previous permutation is
+        restricted and refined with a small budget — no cold compile —
+        and entries whose algorithm became infeasible at the new group
+        size (power-of-two builders) are re-selected among feasible
+        candidates.  Fires ``node_leave`` with the per-entry ladder
+        rungs.  Returns the recovered plan (None when the session had
+        no plan, or recovery itself failed and the session degraded to
+        plan-less).
+        """
+        self._require_open("handle node departure")
+        if self._probe is None:
+            raise SessionError(
+                "on_node_leave needs an attached session; call attach()")
+        n = self._probe.n
+        leave = sorted({int(x) for x in nodes})
+        if not leave:
+            raise ValueError("on_node_leave needs at least one node id")
+        bad = [x for x in leave if x < 0 or x >= n]
+        if bad:
+            raise ValueError(
+                f"on_node_leave ids {bad} outside the fabric of {n} nodes")
+        survivors = [i for i in range(n) if i not in set(leave)]
+        if len(survivors) < 2:
+            raise SessionError(
+                f"cannot drop {len(leave)} of {n} nodes: fewer than 2 "
+                f"survivors")
+        new_fabric = self._fabric.subset(survivors) \
+            if self._fabric is not None else None
+        new_probe = self._probe.subset(survivors)
+        old_to_new = {old: new for new, old in enumerate(survivors)}
+        with self._lock:
+            if self._alive is not None and len(self._alive) == n:
+                self._alive = [self._alive[k] for k in survivors]
+        plan, rungs = self._rebind_membership(
+            new_fabric, new_probe, old_to_new, ())
+        self._fire("node_leave", nodes=tuple(leave),
+                   survivors=tuple(survivors), rungs=rungs, plan=plan)
+        return plan
+
+    def on_node_join(self, nodes: Optional[Sequence[int]] = None,
+                     count: int = 1) -> Optional[Plan]:
+        """Handle (re)joining nodes — the other half of elastic churn.
+
+        ``nodes`` are ids in the *attach-time* numbering (the ids
+        :meth:`on_node_leave` reported via ``self.alive``); default: the
+        first ``count`` departed nodes.  The grown fabric is re-probed
+        (the joiners have no measurements), full-fabric plan entries
+        absorb the joiners — appended to the warm-start order, placed by
+        the budgeted refinement — and sub-group entries are left as
+        they are.  Fires ``node_join``.  Requires the attach-time
+        fabric topology (synthetic kinds); live fleets re-attach.
+        """
+        self._require_open("handle node join")
+        if self._base_fabric is None or self._alive is None:
+            raise SessionError(
+                "on_node_join needs the attach-time fabric topology to "
+                "re-probe the joined nodes; attach a fabric (synthetic "
+                "kinds) — live fleets should re-attach instead")
+        base_n = self._base_fabric.n
+        alive = list(self._alive)
+        dead = set(range(base_n)) - set(alive)
+        if nodes is None:
+            if not dead:
+                raise SessionError(
+                    "on_node_join: every attach-time node is already live")
+            joining = sorted(dead)[:max(1, int(count))]
+        else:
+            joining = sorted({int(x) for x in nodes})
+            bad = [x for x in joining if x not in dead]
+            if bad:
+                raise ValueError(
+                    f"on_node_join ids {bad} are not departed members of "
+                    f"the attach-time fabric ({len(alive)}/{base_n} live)")
+        if not joining:
+            raise ValueError("on_node_join needs at least one node id")
+        new_alive = sorted(set(alive) | set(joining))
+        new_fabric = self._base_fabric if len(new_alive) == base_n \
+            else self._base_fabric.subset(new_alive)
+        new_probe = self._probe_fabric(new_fabric)
+        pos = {b: i for i, b in enumerate(new_alive)}
+        old_to_new = {k: pos[b] for k, b in enumerate(alive)}
+        joiners = tuple(pos[b] for b in joining)
+        with self._lock:
+            self._alive = new_alive
+        plan, rungs = self._rebind_membership(
+            new_fabric, new_probe, old_to_new, joiners)
+        self._fire("node_join", nodes=tuple(joining), joiners=joiners,
+                   rungs=rungs, plan=plan)
+        return plan
+
+    def _rebind_membership(self, new_fabric: Optional[Fabric],
+                           new_probe: ProbeResult,
+                           old_to_new: Dict[int, int],
+                           joiners: Tuple[int, ...]):
+        """Swap fabric+probe after a membership change and warm-recover
+        the plan; returns ``(plan, rungs)``."""
+        cfg = self.config
+        rungs = None
+        with self._lock:
+            old_plan = self._plan
+            self._fabric = new_fabric
+            if self._oracle_fabric is not None:
+                self._oracle_fabric = new_fabric
+            self._probe = new_probe
+            self._sparse_fresh = None
+            if self._service is not None:   # compiler bound to old oracle
+                self._service.close()
+                self._service = None
+            if self._mesh_shape is not None and \
+                    int(np.prod(self._mesh_shape)) != new_probe.n:
+                # an N-D assignment cannot survive a node-count change
+                self._mesh_shape = None
+                self._axis_names = None
+            if old_plan is None:
+                return None, None
+            try:
+                new_plan, rungs = recover_plan(
+                    old_plan, old_to_new, new_probe.lat, new_probe.bw,
+                    hierarchy=getattr(new_probe, "hierarchy", None),
+                    joiners=joiners, seed=cfg.solver.seed)
+            except Exception as e:
+                # keeping a plan whose numbering no longer matches the
+                # fabric would be worse than having none: degrade to
+                # plan-less (the next plan() recompiles cold)
+                self._plan = None
+                self._drift = None
+                if self._health.force_degraded(
+                        f"membership recovery failed: {e!r}") == "degraded":
+                    self._safe_fire("degraded", state="degraded",
+                                    reason=repr(e))
+                return None, None
+            self._plan = new_plan
+            if self._mix is not None:
+                self.cache.put(new_plan, self._mix.key())
+            self._drift = DriftMonitor(
+                new_plan, self.reference_matrix(),
+                cache=self.cache, threshold=cfg.drift.threshold)
+            if rungs and any(r in ("stale", "identity")
+                             for r in rungs.values()):
+                # a rung below warm-resolve means the plan is serving a
+                # weaker order than a compile would produce
+                if self._health.force_degraded(
+                        "membership recovery served a stale/identity "
+                        "rung") == "degraded":
+                    self._safe_fire("degraded", state="degraded",
+                                    reason="ladder")
+        return self._plan, rungs
 
     # -- non-intrusive wrap ------------------------------------------------
     def wrap(self) -> "_WrapGuard":

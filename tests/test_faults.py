@@ -1,0 +1,768 @@
+"""Seeded chaos suite for ``repro.faults`` (ISSUE-6 tentpole).
+
+Covers: deterministic fault schedules and their JSON round-trip, the
+``FaultyFabric`` wrapper (probe timeouts, corrupted samples, link
+degradation, membership replay), retry policy + backoff, the session
+health state machine and monitor ladder (degraded → halted, identity
+pinned, no exception escape, no hot-spin), plan-cache quarantine of
+corrupted store files, drift/reranker input validation, the
+elastic-restriction consistency set (``Fabric.subset`` /
+``ProbeResult.subset`` / ``SparseProbeResult.subset`` /
+``HierarchyModel.restrict`` agree), the degradation-ladder invariant at
+every rung, and ``Session.on_node_leave`` / ``on_node_join`` churn.
+
+Everything is seeded — the chaos is reproducible by construction.
+"""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.fabric import (
+    make_datacenter,
+    probe_fabric,
+    scramble,
+    sparse_probe_fabric,
+)
+from repro.faults import (
+    FAULT_KINDS,
+    HEALTH_STATES,
+    LADDER_RUNGS,
+    FaultEvent,
+    FaultSchedule,
+    FaultyFabric,
+    HealthTracker,
+    ProbeTimeout,
+    RetryError,
+    RetryPolicy,
+    call_with_retries,
+    identity_fallback,
+    recover_entry,
+    recover_plan,
+    restrict_perm,
+)
+from repro.plan import (
+    CollectiveRequest,
+    JobMix,
+    PlanCache,
+    PlanCompiler,
+    SolveBudget,
+)
+from repro.plan.cache import DriftMonitor
+from repro.session import Session, SessionConfig, SessionError
+
+SMALL = {
+    "fabric": {"kind": "datacenter", "nodes": 12, "scramble_seed": 1},
+    "probe": {"n_probes": 2},
+    "solver": {"budget": {"iters": 60, "chains": 2}},
+    "payload_bytes": 1e6,
+}
+
+
+def small_config(**over):
+    return SessionConfig.from_dict(SMALL).replace(**over)
+
+
+def small_mix():
+    return JobMix((CollectiveRequest("all-reduce", 1 << 20),), name="t")
+
+
+def compile_small(n=10, seed=0, iters=60):
+    fab, _ = scramble(make_datacenter(n, seed=0), seed=1)
+    probe = probe_fabric(fab, n_probes=2, seed=seed)
+    comp = PlanCompiler(budget=SolveBudget(iters=iters, chains=2), seed=seed)
+    return fab, probe, comp.compile(probe, small_mix())
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule / FaultEvent
+# ---------------------------------------------------------------------------
+
+class TestFaultSchedule:
+    def test_generate_deterministic(self):
+        a = FaultSchedule.generate(16, ticks=32, seed=7)
+        b = FaultSchedule.generate(16, ticks=32, seed=7)
+        assert a.to_dict() == b.to_dict()
+        c = FaultSchedule.generate(16, ticks=32, seed=8)
+        assert a.to_dict() != c.to_dict()
+
+    def test_json_round_trip(self):
+        s = FaultSchedule.generate(16, ticks=16, seed=3, preempt_frac=0.25)
+        blob = json.dumps(s.to_dict())
+        back = FaultSchedule.from_dict(json.loads(blob))
+        assert back.to_dict() == s.to_dict()
+        assert back.events == s.events
+
+    def test_kinds_are_known(self):
+        s = FaultSchedule.generate(16, ticks=32, seed=0, preempt_frac=0.25)
+        assert {e.kind for e in s.events} <= set(FAULT_KINDS)
+
+    def test_preempt_frac_schedules_leave_and_rejoin(self):
+        s = FaultSchedule.generate(16, ticks=32, seed=0, preempt_frac=0.25)
+        kinds = [e.kind for e in s.events]
+        assert "node_preempt" in kinds and "node_join" in kinds
+        pre = next(e for e in s.events if e.kind == "node_preempt")
+        join = next(e for e in s.events if e.kind == "node_join")
+        assert len(pre.nodes) == 4           # 25% of 16
+        assert join.tick > pre.tick
+        assert set(join.nodes) == set(pre.nodes)
+
+    def test_event_active_window(self):
+        e = FaultEvent("link_degrade", tick=5, duration=3, factor=2.0)
+        assert not e.active_at(4)
+        assert e.active_at(5) and e.active_at(7)
+        assert not e.active_at(8)
+
+    def test_bad_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent("coffee_spill", tick=0)
+
+
+# ---------------------------------------------------------------------------
+# FaultyFabric
+# ---------------------------------------------------------------------------
+
+class TestFaultyFabric:
+    def _fab(self, n=8):
+        return make_datacenter(n, seed=0)
+
+    def test_clean_schedule_is_transparent(self):
+        fab = self._fab()
+        ff = FaultyFabric(fab, FaultSchedule(events=(), seed=0))
+        np.testing.assert_allclose(ff.lat, fab.lat)
+        np.testing.assert_allclose(ff.bw, fab.bw)
+        assert ff.n == fab.n
+
+    def test_probe_timeout_raises(self):
+        fab = self._fab()
+        ff = FaultyFabric(fab, FaultSchedule(
+            events=(FaultEvent("probe_timeout", tick=0),), seed=0))
+        with pytest.raises(ProbeTimeout):
+            _ = ff.lat
+
+    def test_corruption_is_seeded_and_marks_entries(self):
+        fab = self._fab()
+        sched = FaultSchedule(
+            events=(FaultEvent("probe_nan", tick=0, frac=0.2),), seed=5)
+        a = FaultyFabric(fab, sched).lat
+        b = FaultyFabric(fab, sched).lat
+        np.testing.assert_array_equal(np.isnan(a), np.isnan(b))
+        assert np.isnan(a).any()
+
+    def test_link_degrade_inflates_cost(self):
+        fab = self._fab()
+        ff = FaultyFabric(fab, FaultSchedule(events=(
+            FaultEvent("link_degrade", tick=0, duration=4,
+                       nodes=(1,), factor=4.0),), seed=0))
+        assert ff.lat[1, 2] > fab.lat[1, 2]
+        assert ff.bw[1, 2] < fab.bw[1, 2]
+        # untouched pair stays put
+        np.testing.assert_allclose(ff.lat[3, 4], fab.lat[3, 4])
+
+    def test_advance_returns_membership_and_alive_replays(self):
+        fab = self._fab()
+        sched = FaultSchedule(events=(
+            FaultEvent("node_preempt", tick=2, nodes=(1, 5)),
+            FaultEvent("node_join", tick=4, nodes=(5,)),), seed=0)
+        ff = FaultyFabric(fab, sched)
+        assert ff.advance() == []                       # tick 1
+        evs = ff.advance()                              # tick 2
+        assert [e.kind for e in evs] == ["node_preempt"]
+        assert sorted(ff.alive()) == [0, 2, 3, 4, 6, 7]
+        ff.advance(2)                                   # tick 4
+        assert sorted(ff.alive()) == [0, 2, 3, 4, 5, 6, 7]
+
+    def test_subset_delegates_to_base(self):
+        fab = self._fab()
+        ff = FaultyFabric(fab, FaultSchedule(events=(), seed=0))
+        sub = ff.subset([0, 2, 4])
+        np.testing.assert_allclose(
+            sub.lat, fab.lat[np.ix_([0, 2, 4], [0, 2, 4])])
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy / call_with_retries
+# ---------------------------------------------------------------------------
+
+class TestRetry:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_retries=-1)
+        with pytest.raises(ValueError):
+            RetryPolicy(base_delay_s=-0.1)
+        with pytest.raises(ValueError):
+            RetryPolicy(multiplier=0.5)
+        with pytest.raises(ValueError):
+            RetryPolicy(jitter=2.0)
+        with pytest.raises(ValueError):
+            RetryPolicy(failure_threshold=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(halt_threshold=2, failure_threshold=3)
+
+    def test_delay_grows_and_caps(self):
+        p = RetryPolicy(base_delay_s=0.1, max_delay_s=0.5, multiplier=2.0,
+                        jitter=0.0)
+        ds = [p.delay(a) for a in range(1, 7)]
+        assert ds[0] == pytest.approx(0.1)
+        assert ds[1] == pytest.approx(0.2)
+        assert all(d <= 0.5 + 1e-12 for d in ds)
+        assert ds[-1] == pytest.approx(0.5)
+
+    def test_jitter_is_bounded_and_seeded(self):
+        p = RetryPolicy(base_delay_s=0.1, max_delay_s=10.0, jitter=0.5,
+                        seed=3)
+        rng = np.random.default_rng(3)
+        ds = [p.delay(1, rng) for _ in range(50)]
+        assert all(0.05 <= d <= 0.15 + 1e-12 for d in ds)
+        rng2 = np.random.default_rng(3)
+        assert ds[0] == pytest.approx(p.delay(1, rng2))
+
+    def test_call_with_retries_recovers(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise TimeoutError("transient")
+            return 42
+
+        slept = []
+        out = call_with_retries(
+            flaky, RetryPolicy(max_retries=3, base_delay_s=0.01,
+                               jitter=0.0),
+            sleep=slept.append)
+        assert out == 42 and calls["n"] == 3
+        assert len(slept) == 2 and all(s > 0 for s in slept)
+
+    def test_call_with_retries_exhausts(self):
+        def broken():
+            raise ProbeTimeout("probe lost")
+
+        with pytest.raises(RetryError) as ei:
+            call_with_retries(
+                broken, RetryPolicy(max_retries=2, base_delay_s=0.0),
+                sleep=lambda s: None)
+        assert ei.value.attempts == 3
+        assert isinstance(ei.value.last, ProbeTimeout)
+
+
+# ---------------------------------------------------------------------------
+# HealthTracker
+# ---------------------------------------------------------------------------
+
+class TestHealthTracker:
+    def test_states_and_ladder(self):
+        h = HealthTracker(failure_threshold=2, halt_threshold=4)
+        assert h.state == "healthy" and h.state in HEALTH_STATES
+        assert h.record_failure("a") is None
+        assert h.record_failure("b") == "degraded"
+        assert h.record_failure("c") is None
+        assert h.record_failure("d") == "halted"
+        # halted is sticky
+        h.record_success()
+        assert h.state == "halted"
+        h.reset()
+        assert h.state == "healthy" and h.consecutive_failures == 0
+
+    def test_success_heals_degraded(self):
+        h = HealthTracker(failure_threshold=1, halt_threshold=10)
+        assert h.record_failure("x") == "degraded"
+        assert h.record_success() == "healthy"
+        assert h.state == "healthy"
+
+    def test_force_degraded(self):
+        h = HealthTracker()
+        assert h.force_degraded("ladder") == "degraded"
+        assert h.force_degraded("again") is None       # already there
+
+
+# ---------------------------------------------------------------------------
+# monitor() under injected faults
+# ---------------------------------------------------------------------------
+
+class TestMonitorLadder:
+    def test_degraded_then_halted_no_escape(self):
+        cfg = small_config(retry={
+            "max_retries": 0, "base_delay_s": 0.001, "max_delay_s": 0.005,
+            "jitter": 0.0, "failure_threshold": 2, "halt_threshold": 4})
+        seen = []
+        polls = {"n": 0}
+
+        def poll():
+            polls["n"] += 1
+            raise ProbeTimeout("injected")
+
+        with Session(cfg) as s:
+            s.plan(small_mix())
+            s.on("degraded",
+                 lambda sess, **i: seen.append(i.get("state")))
+            t = s.monitor(poll=poll, interval_s=0.002)
+            deadline = time.time() + 5.0
+            while t.is_alive() and time.time() < deadline:
+                time.sleep(0.01)
+            assert not t.is_alive(), "monitor thread should stop at halt"
+            assert s.health == "halted"
+            assert seen[0] == "degraded" and "halted" in seen
+            # halt pinned every entry to identity order in place
+            for e in s.planned.entries.values():
+                assert e.perm == e.group
+            # halt_threshold failures, not a hot spin
+            assert polls["n"] == 4
+
+    def test_monitor_recovers_and_fires_hook(self):
+        cfg = small_config(retry={
+            "max_retries": 0, "base_delay_s": 0.001, "jitter": 0.0,
+            "failure_threshold": 1, "halt_threshold": 10})
+        events = []
+        fail_first = {"n": 2}
+
+        def poll():
+            if fail_first["n"] > 0:
+                fail_first["n"] -= 1
+                raise ProbeTimeout("early wobble")
+            return None   # healthy tick, nothing to observe
+
+        with Session(cfg) as s:
+            s.plan(small_mix())
+            s.on("degraded", lambda sess, **i: events.append("degraded"))
+            s.on("recovered", lambda sess, **i: events.append("recovered"))
+            s.monitor(poll=poll, interval_s=0.002)
+            deadline = time.time() + 5.0
+            while "recovered" not in events and time.time() < deadline:
+                time.sleep(0.01)
+            assert events[:1] == ["degraded"]
+            assert "recovered" in events
+            assert s.health == "healthy"
+
+    def test_hook_exception_does_not_kill_monitor(self):
+        cfg = small_config(retry={
+            "max_retries": 0, "base_delay_s": 0.001, "jitter": 0.0,
+            "failure_threshold": 1, "halt_threshold": 3})
+
+        def bad_hook(sess, **info):
+            raise RuntimeError("hook bug")
+
+        def poll():
+            raise ProbeTimeout("injected")
+
+        with Session(cfg) as s:
+            s.plan(small_mix())
+            s.on("degraded", bad_hook)
+            with pytest.warns(RuntimeWarning):
+                t = s.monitor(poll=poll, interval_s=0.002)
+                deadline = time.time() + 5.0
+                while t.is_alive() and time.time() < deadline:
+                    time.sleep(0.01)
+            assert s.health == "halted"
+
+    def test_probe_retries_through_transient_failure(self):
+        # a fabric whose lat property fails twice then heals: attach()
+        # must succeed through the retry policy
+        fab, _ = scramble(make_datacenter(12, seed=0), seed=1)
+        ff = FaultyFabric(fab, FaultSchedule(events=(
+            FaultEvent("probe_timeout", tick=1, duration=2),), seed=0))
+
+        class HealingFabric:
+            def __getattr__(self, name):
+                return getattr(ff, name)
+
+            @property
+            def lat(self):
+                ff.advance()
+                return ff.lat
+
+        cfg = small_config(retry={"max_retries": 3, "base_delay_s": 0.001,
+                                  "jitter": 0.0})
+        with Session(cfg) as s:
+            s.attach(HealingFabric())
+            assert s.probe.n == 12
+
+
+# ---------------------------------------------------------------------------
+# PlanCache quarantine
+# ---------------------------------------------------------------------------
+
+class TestCacheQuarantine:
+    def test_corrupt_store_file_quarantined(self, tmp_path):
+        fab, probe, plan = compile_small()
+        d = str(tmp_path)
+        PlanCache(store_dir=d).put(plan, "k")
+        fname = [f for f in os.listdir(d) if f.endswith(".json")][0]
+        with open(os.path.join(d, fname), "w") as f:
+            f.write("{not json")
+        fresh = PlanCache(store_dir=d)
+        with pytest.warns(RuntimeWarning, match="quarantin"):
+            got = fresh.get(plan.fingerprint, "k")
+        assert got is None
+        files = os.listdir(d)
+        assert fname not in files
+        assert fname + ".corrupt" in files
+
+    def test_valid_entry_unaffected_by_corrupt_neighbor(self, tmp_path):
+        from repro.plan.cache import _request_tag
+
+        fab, probe, plan = compile_small()
+        d = str(tmp_path)
+        PlanCache(store_dir=d).put(plan, "k")
+        # scanned first (sorted order), same request tag as the real one
+        with open(os.path.join(d, f"aaaa__{_request_tag('k')}.json"),
+                  "w") as f:
+            f.write("][")
+        fresh = PlanCache(store_dir=d)
+        with pytest.warns(RuntimeWarning):
+            got = fresh.get(plan.fingerprint, "k")
+        assert got is not None
+        assert got.entries.keys() == plan.entries.keys()
+
+    def test_truncated_payload_never_raises(self, tmp_path):
+        fab, probe, plan = compile_small()
+        d = str(tmp_path)
+        PlanCache(store_dir=d).put(plan, "k")
+        fname = [f for f in os.listdir(d) if f.endswith(".json")][0]
+        path = os.path.join(d, fname)
+        with open(path, "w") as f:
+            json.dump({"fingerprint": "yes", "entries": "nope"}, f)
+        fresh = PlanCache(store_dir=d)
+        with pytest.warns(RuntimeWarning):
+            assert fresh.get(plan.fingerprint, "k") is None
+
+
+# ---------------------------------------------------------------------------
+# input validation: DriftMonitor.observe / AdaptiveReranker.update
+# ---------------------------------------------------------------------------
+
+class TestObserverValidation:
+    def _monitor(self):
+        fab, probe, plan = compile_small()
+        from repro.fabric import cost_matrix
+        return plan, DriftMonitor(plan, cost_matrix(probe, 1e6))
+
+    def test_drift_rejects_bad_inputs(self):
+        plan, mon = self._monitor()
+        n = plan.n
+        with pytest.raises(ValueError, match="square"):
+            mon.observe(np.zeros((n, n - 1)))
+        with pytest.raises(ValueError, match=str(n)):
+            mon.observe(np.zeros((n + 2, n + 2)))
+        bad = np.ones((n, n))
+        bad[0, 1] = np.nan
+        with pytest.raises(ValueError, match="NaN"):
+            mon.observe(bad)
+        neg = np.ones((n, n))
+        neg[2, 3] = -1.0
+        with pytest.raises(ValueError, match=r"\[2, 3\]"):
+            mon.observe(neg)
+
+    def test_reranker_rejects_bad_inputs(self):
+        from repro.core import RingCost
+        from repro.core.dynamic import AdaptiveReranker
+
+        rr = AdaptiveReranker(
+            model_factory=lambda c: RingCost(len(c), 1e6, c),
+            perm=np.arange(6))
+        with pytest.raises(ValueError, match="square"):
+            rr.update(np.zeros((6, 5)))
+        with pytest.raises(ValueError, match="6"):
+            rr.update(np.zeros((4, 4)))
+        bad = np.ones((6, 6))
+        bad[1, 2] = np.nan
+        with pytest.raises(ValueError, match="NaN"):
+            rr.update(bad)
+        neg = np.ones((6, 6))
+        neg[0, 5] = -3.0
+        with pytest.raises(ValueError, match="negative"):
+            rr.update(neg)
+
+    def test_reranker_still_reranks_valid_input(self):
+        from repro.core import RingCost
+        from repro.core.dynamic import AdaptiveReranker
+
+        rng = np.random.default_rng(0)
+        c = rng.uniform(1, 2, (8, 8))
+        c = (c + c.T) / 2
+        np.fill_diagonal(c, 0)
+        rr = AdaptiveReranker(
+            model_factory=lambda m: RingCost(len(m), 1e6, m),
+            perm=np.arange(8), threshold=1.01)
+        perm, changed = rr.update(c)
+        assert sorted(perm.tolist()) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# elastic restriction consistency
+# ---------------------------------------------------------------------------
+
+class TestRestrictionConsistency:
+    def test_fabric_and_probe_subsets_agree(self):
+        fab, _ = scramble(make_datacenter(12, seed=0), seed=1)
+        probe = probe_fabric(fab, n_probes=2, seed=0)
+        keep = [0, 2, 3, 7, 8, 11]
+        sub_fab = fab.subset(keep)
+        sub_probe = probe.subset(keep)
+        ix = np.ix_(keep, keep)
+        np.testing.assert_allclose(sub_fab.lat, fab.lat[ix])
+        np.testing.assert_allclose(sub_probe.lat, probe.lat[ix])
+        np.testing.assert_allclose(sub_probe.bw, probe.bw[ix])
+        assert sub_probe.n == len(keep)
+
+    def test_probe_subset_validation_mirrors_fabric(self):
+        fab = make_datacenter(8, seed=0)
+        probe = probe_fabric(fab, n_probes=2, seed=0)
+        for bad in ([], [0, 0, 1], [0, 99]):
+            with pytest.raises(ValueError):
+                probe.subset(bad)
+            with pytest.raises(ValueError):
+                fab.subset(bad)
+
+    def test_sparse_subset_restricts_hierarchy_and_landmarks(self):
+        fab, _ = scramble(make_datacenter(16, seed=0), seed=1)
+        sp = sparse_probe_fabric(fab, seed=0)
+        keep = list(range(0, 16, 2))
+        sub = sp.subset(keep)
+        ix = np.ix_(keep, keep)
+        np.testing.assert_allclose(sub.lat, sp.lat[ix])
+        assert sub.n == len(keep)
+        # hierarchy restriction agrees with restricting the original
+        want = sp.hierarchy.restrict(keep)
+        assert sub.hierarchy.labels(0).shape == (len(keep),)
+        for tier in range(want.n_tiers):
+            np.testing.assert_array_equal(
+                sub.hierarchy.labels(tier), want.labels(tier))
+        # landmarks remapped into the new numbering
+        assert all(0 <= lm < len(keep) for lm in sub.landmarks)
+
+    def test_hierarchy_restrict_preserves_grouping(self):
+        fab, _ = scramble(make_datacenter(16, seed=0), seed=1)
+        sp = sparse_probe_fabric(fab, seed=0)
+        h = sp.hierarchy
+        keep = [0, 1, 2, 3, 8, 9, 10, 11]
+        sub = h.restrict(keep)
+        for tier in range(h.n_tiers):
+            lab, slab = h.labels(tier), sub.labels(tier)
+            for i, a in enumerate(keep):
+                for j, b in enumerate(keep):
+                    assert (lab[a] == lab[b]) == (slab[i] == slab[j])
+
+
+# ---------------------------------------------------------------------------
+# the degradation ladder
+# ---------------------------------------------------------------------------
+
+class TestLadder:
+    def test_restrict_perm(self):
+        assert restrict_perm([3, 1, 4, 0, 2], {1, 3, 4}) == [3, 1, 4]
+        assert restrict_perm([0, 1, 2], {0, 1, 2}) == [0, 1, 2]
+        assert restrict_perm([2, 0, 1], set()) == []
+
+    def _recover(self, monkeypatch=None, drop=(1, 5, 9)):
+        fab, probe, plan = compile_small(n=12)
+        survivors = [i for i in range(12) if i not in set(drop)]
+        o2n = {old: new for new, old in enumerate(survivors)}
+        ix = np.ix_(survivors, survivors)
+        entry = next(iter(plan.entries.values()))
+        return entry, o2n, probe.lat[ix], probe.bw[ix]
+
+    def test_warm_rung_valid_and_never_worse(self):
+        entry, o2n, lat, bw = self._recover()
+        new, rung = recover_entry(entry, o2n, lat, bw)
+        assert rung == "warm_resolve" and rung in LADDER_RUNGS
+        assert sorted(new.perm) == list(new.group)
+        assert new.expected_time <= new.best_identity_time * (1 + 1e-9)
+
+    def test_hot_patch_rung(self, monkeypatch):
+        import repro.faults.ladder as ladder
+
+        monkeypatch.setattr(ladder, "warm_refine",
+                            lambda *a, **k: 1 / 0)
+        entry, o2n, lat, bw = self._recover()
+        new, rung = recover_entry(entry, o2n, lat, bw)
+        assert rung in ("hot_patch", "identity")
+        assert sorted(new.perm) == list(new.group)
+        assert new.expected_time <= new.best_identity_time * (1 + 1e-9)
+
+    def test_stale_rung(self, monkeypatch):
+        import repro.faults.ladder as ladder
+
+        monkeypatch.setattr(ladder, "warm_refine", lambda *a, **k: 1 / 0)
+        monkeypatch.setattr(ladder, "bottleneck_swap",
+                            lambda *a, **k: 1 / 0)
+        entry, o2n, lat, bw = self._recover()
+        new, rung = recover_entry(entry, o2n, lat, bw)
+        assert rung in ("stale", "identity")
+        assert sorted(new.perm) == list(new.group)
+        assert new.expected_time <= new.best_identity_time * (1 + 1e-9)
+
+    def test_identity_rung_guard(self, monkeypatch):
+        import repro.faults.ladder as ladder
+        from repro.plan.compiler import PlanEntry
+
+        # refiners are out, so the stale rung would serve the old perm —
+        # which on this matrix is priced far above identity.  The final
+        # guard must land on the identity rung.
+        monkeypatch.setattr(ladder, "warm_refine", lambda *a, **k: 1 / 0)
+
+        def bad_swap(model, perm, **kw):
+            raise RuntimeError("no swap either")
+
+        monkeypatch.setattr(ladder, "bottleneck_swap", bad_swap)
+        n = 6
+        lat = np.full((n, n), 100.0)          # identity-adjacent cheap,
+        for i in range(n):                    # everything else expensive
+            lat[i, i] = 0.0
+            lat[i, (i + 1) % n] = lat[(i + 1) % n, i] = 1.0
+        entry = PlanEntry(
+            op="all-reduce", bucket=0, size_bytes=1e6,
+            group=tuple(range(n)), algo="ring", algo_kwargs={}, chunks=1,
+            perm=(0, 3, 1, 4, 2, 5),          # every hop is a 100x edge
+            expected_time=0.0, identity_times={}, solver_cost=0.0,
+            oracle="", program_fingerprint="")
+        o2n = {i: i for i in range(n)}
+        new, rung = recover_entry(entry, o2n, lat, None)
+        assert rung == "identity"
+        assert new.perm == new.group
+        assert new.expected_time == pytest.approx(new.best_identity_time)
+
+    def test_dropped_when_too_few_survive(self):
+        entry, o2n, lat, bw = self._recover()
+        tiny = {k: v for k, v in list(o2n.items())[:1]}
+        new, rung = recover_entry(entry, tiny, lat[:1, :1], bw[:1, :1])
+        assert new is None and rung == "dropped"
+
+    def test_infeasible_algo_reselected(self):
+        # drop to a non-power-of-two size: pow-2-only builders must be
+        # replaced by a feasible candidate
+        import dataclasses
+
+        fab, probe, plan = compile_small(n=8)
+        entry = dataclasses.replace(
+            next(iter(plan.entries.values())),
+            algo="halving_doubling", algo_kwargs={})
+        survivors = [0, 1, 2, 4, 5, 6, 7]
+        o2n = {old: new for new, old in enumerate(survivors)}
+        ix = np.ix_(survivors, survivors)
+        new, rung = recover_entry(entry, o2n, probe.lat[ix], probe.bw[ix])
+        assert new.algo != "halving_doubling"
+        assert sorted(new.perm) == list(new.group)
+
+    def test_recover_plan_with_joiners(self):
+        fab, probe, plan = compile_small(n=10)
+        survivors = [0, 1, 2, 3, 4, 5, 6, 7]        # 8 survive
+        o2n = {old: new for new, old in enumerate(survivors)}
+        # two joiners appended at new-local ids 8, 9
+        lat, bw = probe.lat, probe.bw               # same size by luck: 10
+        new_plan, rungs = recover_plan(plan, o2n, lat, bw, joiners=(8, 9))
+        assert new_plan.n == 10
+        for e in new_plan.entries.values():
+            assert sorted(e.perm) == list(e.group)
+            assert len(e.group) == 10               # absorbed the joiners
+        assert set(rungs.values()) <= set(LADDER_RUNGS) | {"dropped"}
+        assert new_plan.meta["recovered_from"] == plan.fingerprint.digest
+
+    def test_identity_fallback_pins_in_place(self):
+        fab, probe, plan = compile_small(n=10)
+        changed = identity_fallback(plan)
+        assert changed >= 0
+        for e in plan.entries.values():
+            assert e.perm == e.group
+        assert plan.meta.get("fallback") == "identity"
+
+
+# ---------------------------------------------------------------------------
+# Session elastic membership
+# ---------------------------------------------------------------------------
+
+class TestElasticSession:
+    def test_leave_then_join_round_trip(self):
+        cfg = small_config()
+        events = []
+        with Session(cfg) as s:
+            s.plan(small_mix())
+            s.on("node_leave", lambda sess, **i: events.append(
+                ("leave", i["survivors"])))
+            s.on("node_join", lambda sess, **i: events.append(
+                ("join", i["nodes"])))
+            plan = s.on_node_leave([1, 5, 9])
+            assert plan is not None and plan.n == 9
+            assert s.alive == [0, 2, 3, 4, 6, 7, 8, 10, 11]
+            assert s.probe.n == 9
+            for e in plan.entries.values():
+                assert sorted(e.perm) == list(e.group)
+            plan2 = s.on_node_join([1, 5])
+            assert plan2 is not None and plan2.n == 11
+            assert 1 in s.alive and 5 in s.alive
+            assert events[0][0] == "leave" and events[1][0] == "join"
+
+    def test_leave_error_paths(self):
+        with Session(small_config()) as s:
+            s.plan(small_mix())
+            with pytest.raises(ValueError, match="at least one"):
+                s.on_node_leave([])
+            with pytest.raises(ValueError, match="outside"):
+                s.on_node_leave([99])
+            with pytest.raises(SessionError, match="survivors"):
+                s.on_node_leave(list(range(11)))
+
+    def test_join_error_paths(self):
+        with Session(small_config()) as s:
+            s.plan(small_mix())
+            with pytest.raises(SessionError, match="already live"):
+                s.on_node_join()
+            s.on_node_leave([0])
+            with pytest.raises(ValueError, match="not departed"):
+                s.on_node_join([3])
+
+    def test_leave_without_plan_is_fine(self):
+        with Session(small_config()) as s:
+            s.attach()
+            assert s.on_node_leave([0, 1]) is None
+            assert s.probe.n == 10
+
+    def test_mesh_plan_dropped_on_churn(self):
+        cfg = SessionConfig.from_dict({
+            "fabric": {"kind": "datacenter", "nodes": 12,
+                       "scramble_seed": 1},
+            "probe": {"n_probes": 2},
+            "solver": {"budget": {"iters": 60, "chains": 2}},
+            "mesh": {"shape": (3, 4)},
+        })
+        with Session(cfg) as s:
+            plan = s.plan(small_mix())
+            assert plan.mesh_plan is not None
+            new = s.on_node_leave([0])
+            assert new is not None and new.mesh_plan is None
+
+    def test_churn_under_generated_schedule(self):
+        # the acceptance scenario in miniature: 25% preemption
+        # mid-session; recovery valid at every event, nothing escapes
+        n = 12
+        fab, _ = scramble(make_datacenter(n, seed=0), seed=1)
+        sched = FaultSchedule.generate(
+            n, ticks=8, seed=0, preempt_frac=0.25,
+            timeout_rate=0.0, drop_rate=0.0, nan_rate=0.0)
+        ff = FaultyFabric(fab, sched)
+        with Session(small_config()) as s:
+            s.attach(fab)
+            s.plan(small_mix())
+            handled = 0
+            for _ in range(8):
+                for ev in ff.advance():
+                    if ev.kind == "node_preempt":
+                        alive = s.alive
+                        plan = s.on_node_leave(
+                            [alive.index(b) for b in ev.nodes
+                             if b in alive])
+                    else:
+                        plan = s.on_node_join(
+                            [b for b in ev.nodes if b not in s.alive])
+                    handled += 1
+                    assert plan is not None
+                    for e in plan.entries.values():
+                        assert sorted(e.perm) == list(e.group)
+                        assert e.expected_time <= \
+                            e.best_identity_time * (1 + 1e-9)
+            assert handled >= 2                      # preempt + rejoin
+            assert len(s.alive) == n                 # everyone came back
