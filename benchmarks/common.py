@@ -1,9 +1,14 @@
-"""Shared benchmark scaffolding: fabrics, CSV emission, Spearman."""
+"""Shared benchmark scaffolding: fabrics, CSV emission, provenance."""
 
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -49,3 +54,43 @@ class Timer:
 
     def __exit__(self, *a):
         self.s = time.perf_counter() - self.t0
+
+
+def run_meta(seed: int = 0) -> Dict[str, Any]:
+    """Provenance stamp for committed ``BENCH_*.json`` artifacts.
+
+    Records everything needed to reproduce (or distrust) a committed
+    number: the git sha the benchmark ran at, library versions, the
+    seed, and a UTC timestamp.  Never raises — a benchmark must not
+    fail because provenance is unavailable (e.g. no git in CI).
+    """
+    meta: Dict[str, Any] = {
+        "seed": seed,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": sys.version.split()[0],
+        "numpy": np.__version__,
+    }
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+    except Exception:
+        meta["jax"] = None
+    try:
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=repo,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        meta["git_sha"] = sha or None
+    except Exception:
+        meta["git_sha"] = None
+    return meta
+
+
+def write_json(path: str, payload: Dict[str, Any], seed: int = 0) -> None:
+    """Write a benchmark payload stamped with :func:`run_meta`."""
+    payload = dict(payload)
+    payload["meta"] = run_meta(seed)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}", file=sys.stderr)

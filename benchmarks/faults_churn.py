@@ -40,6 +40,11 @@ if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
 
 import numpy as np
 
+try:
+    from .common import write_json
+except ImportError:   # plain-script mode: benchmarks/ is sys.path[0]
+    from common import write_json
+
 from repro.collective import (
     CollectiveOp,
     SimExecutor,
@@ -271,9 +276,7 @@ def run(smoke: bool = False, out_path: str = "BENCH_faults.json",
     rows = c_rows + w_rows + l_rows
     for r in rows:
         print(f"{r['name']},{r['us']:.3f},{r['derived']}")
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"wrote {out_path}", file=sys.stderr)
+    write_json(out_path, results, seed)
     # acceptance gates.  RuntimeError (not SystemExit): benchmarks/run.py
     # catches Exception per module, so one failed gate must not abort the
     # whole suite.  The identity and no-escape gates hold in smoke too;

@@ -1,0 +1,92 @@
+"""Observability benchmark: tracing overhead + capture→replay.
+
+Two committed claims live in ``BENCH_obs.json``:
+
+* **overhead** — the same ``PlanCompiler.compile`` timed with the obs
+  tracer disabled (the PR-6-equivalent baseline path: ``span()``
+  returns the shared null span and records nothing) and enabled; the
+  enabled median must sit within 2% of the disabled median;
+* **capture → replay** — a synthetic bursty workload trace
+  (:func:`repro.obs.synthetic_bursty_trace`) folded into per-phase
+  windows (:func:`repro.obs.fold`), replayed under per-window plans vs
+  the single declared-mix plan.  Phase-aware planning must not lose.
+
+Emits the harness CSV rows and writes ``BENCH_obs.json`` at the repo
+root (stamped with git sha / versions / seed via ``common.run_meta``).
+Runnable standalone: ``python benchmarks/obs_trace.py [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_repo_root, "src"))
+
+try:
+    from .common import write_json
+except ImportError:   # plain-script mode: benchmarks/ is sys.path[0]
+    from common import write_json
+
+from repro.cli import run_obs_scenario
+
+#: committed budget for enabled-tracer overhead on plan compiles
+OVERHEAD_BUDGET_PCT = 2.0
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_obs.json",
+        seed: int = 0):
+    results = run_obs_scenario(smoke=smoke, seed=seed)
+    results["benchmark"] = "obs_trace"
+    results["overhead_budget_pct"] = OVERHEAD_BUDGET_PCT
+
+    c = results["compile"]
+    r = results["replay"]
+    rows = [
+        {"name": "obs_compile_disabled",
+         "us": c["disabled_s"] * 1e6,
+         "derived": f"median_of={c['reps']}"},
+        {"name": "obs_compile_enabled",
+         "us": c["enabled_s"] * 1e6,
+         "derived": f"overhead={c['overhead_pct']:+.2f}%"},
+        {"name": "obs_replay_declared",
+         "us": r["declared_s"] * 1e6,
+         "derived": f"records={r['records']}"},
+        {"name": "obs_replay_phased",
+         "us": r["phased_s"] * 1e6,
+         "derived": f"windows={r['windows']};beats_declared="
+                    f"{r['phased_beats_declared']}"},
+    ]
+    for row in rows:
+        print(f"{row['name']},{row['us']:.3f},{row['derived']}")
+    write_json(out_path, results, seed)
+    # acceptance gates.  RuntimeError (not SystemExit): benchmarks/run.py
+    # catches Exception per module, so one failed gate must not abort the
+    # whole suite.  The overhead gate only binds on full (non-smoke) runs
+    # — smoke compiles are too short for a stable 2% measurement.
+    if not r["phased_beats_declared"]:
+        raise RuntimeError(
+            f"phase-windowed plans lost to the declared-mix plan "
+            f"({r['phased_s']:.6f}s vs {r['declared_s']:.6f}s)")
+    if not smoke and c["overhead_pct"] >= OVERHEAD_BUDGET_PCT:
+        raise RuntimeError(
+            f"enabled-tracer overhead {c['overhead_pct']:.2f}% exceeds "
+            f"the {OVERHEAD_BUDGET_PCT}% budget")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: smaller fabric, fewer reps")
+    ap.add_argument("--out", default="BENCH_obs.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,11 @@ if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
     _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(_repo_root, "src"))
 
+try:
+    from .common import write_json
+except ImportError:   # plain-script mode: benchmarks/ is sys.path[0]
+    from common import write_json
+
 from repro.core import make_datacenter, make_tpu_fleet, probe_fabric, scramble
 from repro.plan import (
     CollectiveRequest,
@@ -181,9 +186,7 @@ def run(smoke: bool = False, out_path: str = "BENCH_plan_compiler.json",
 
     for r in rows:
         print(f"{r['name']},{r['us']:.3f},{r['derived']}")
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"wrote {out_path}", file=sys.stderr)
+    write_json(out_path, results, seed)
     return results
 
 

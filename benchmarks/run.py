@@ -19,6 +19,7 @@ def main() -> None:
         fig1_distribution,
         fig2_heatmap,
         fig4_speedups,
+        obs_trace,
         plan_compiler,
         roofline,
         solver_quality,
@@ -28,7 +29,8 @@ def main() -> None:
     failures = 0
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
-                plan_compiler, collective_ir, fabric_probe, faults_churn):
+                plan_compiler, collective_ir, fabric_probe, faults_churn,
+                obs_trace):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

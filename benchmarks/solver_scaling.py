@@ -32,6 +32,11 @@ if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
     _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(_repo_root, "src"))
 
+try:
+    from .common import write_json
+except ImportError:   # plain-script mode: benchmarks/ is sys.path[0]
+    from common import write_json
+
 from repro.core import make_cost_model, optimize_mesh_assignment, solve
 
 #: Full sweep; --quick trims to the first two entries for CI smoke runs.
@@ -169,9 +174,7 @@ def run(quick: bool = False, out_path: str = "BENCH_solver_scaling.json",
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', 0):.3f},{r.get('derived', '')}")
 
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"wrote {out_path}", file=sys.stderr)
+    write_json(out_path, results, seed)
     return results
 
 

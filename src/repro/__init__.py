@@ -34,8 +34,14 @@ _EXPORTS = {
     "CacheConfig": "repro.session",
     "DriftConfig": "repro.session",
     "MeshConfig": "repro.session",
+    "ObsConfig": "repro.session",
     "train_mix": "repro.session",
     "serve_mix": "repro.session",
+    # observability
+    "Tracer": "repro.obs",
+    "MetricsRegistry": "repro.obs",
+    "WorkloadRecorder": "repro.obs",
+    "WorkloadTrace": "repro.obs",
     # collective IR
     "CollectiveOp": "repro.collective",
     "Program": "repro.collective",

@@ -24,10 +24,12 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-import time
 from typing import Any, Dict, List, Optional, Sequence
 
-__all__ = ["main", "build_parser", "session_config_from_args"]
+from repro import obs
+
+__all__ = ["main", "build_parser", "session_config_from_args",
+           "run_obs_scenario"]
 
 
 # ---------------------------------------------------------------------------
@@ -361,9 +363,10 @@ def cmd_serve(args: argparse.Namespace) -> int:
         if plan is not None:
             print(f"[serve] plan {plan.fingerprint.digest} hints: "
                   f"{eng.collective_hints(cfg.payload_bytes)}")
-        t0 = time.perf_counter()
-        outs = eng.generate(prompts, frontend_embeds=fe)
-        dt = time.perf_counter() - t0
+        timer = obs.tracer().timer("cli.serve.generate", batch=args.batch)
+        with timer:
+            outs = eng.generate(prompts, frontend_embeds=fe)
+        dt = max(timer.elapsed, 1e-9)
     total = sum(len(o) for o in outs)
     print(f"[serve] arch={arch.name} {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s)")
@@ -401,15 +404,16 @@ def cmd_bench_faults(args: argparse.Namespace) -> int:
         s.plan()
         for _ in range(8):
             for ev in faulty.advance():
-                t0 = time.perf_counter()
-                if ev.kind == "node_preempt":
-                    alive = s.alive
-                    plan = s.on_node_leave(
-                        [alive.index(b) for b in ev.nodes if b in alive])
-                else:
-                    plan = s.on_node_join(
-                        [b for b in ev.nodes if b not in s.alive])
-                ms = (time.perf_counter() - t0) * 1e3
+                timer = obs.tracer().timer("bench.recovery", kind=ev.kind)
+                with timer:
+                    if ev.kind == "node_preempt":
+                        alive = s.alive
+                        plan = s.on_node_leave(
+                            [alive.index(b) for b in ev.nodes if b in alive])
+                    else:
+                        plan = s.on_node_join(
+                            [b for b in ev.nodes if b not in s.alive])
+                ms = timer.elapsed * 1e3
                 ok = plan is not None and all(
                     e.expected_time <= e.best_identity_time * (1 + 1e-9)
                     and sorted(e.perm) == list(e.group)
@@ -440,6 +444,109 @@ def cmd_bench_faults(args: argparse.Namespace) -> int:
     return 0
 
 
+def run_obs_scenario(smoke: bool = True, seed: int = 0,
+                     window_s: float = 1.0) -> Dict[str, Any]:
+    """The obs benchmark scenario (CLI ``bench --scenario obs`` and
+    ``benchmarks/obs_trace.py`` share this).
+
+    Two measurements:
+
+    * **tracing overhead** — median wall time of the same
+      ``PlanCompiler.compile`` with the tracer disabled vs enabled
+      (the disabled path must be a no-op: ``span()`` returns the
+      shared null span);
+    * **capture → replay** — price a synthetic bursty trace under the
+      single declared-mix plan (one operator-declared payload size, see
+      :func:`repro.obs.declared_mix`) vs per-phase-window plans
+      compiled from :func:`repro.obs.fold` output.  Phase-aware
+      planning must not lose to the stationary plan.
+    """
+    import statistics
+
+    from repro.fabric import make_datacenter, probe_fabric, scramble
+    from repro.obs import declared_mix, fold, replay, synthetic_bursty_trace
+    from repro.plan import PlanCompiler, SolveBudget
+
+    n = 16 if smoke else 32
+    iters = 60 if smoke else 200
+    reps = 5 if smoke else 9
+    fab, _ = scramble(make_datacenter(n, seed=seed), seed=seed + 1)
+    probe = probe_fabric(fab, seed=seed)
+    compiler = PlanCompiler(budget=SolveBudget(iters=iters, chains=2))
+
+    trace = synthetic_bursty_trace(n, seed=seed)
+    stationary_mix = declared_mix(trace)
+
+    tr = obs.tracer()
+    was_enabled = tr.enabled
+    timings: Dict[str, float] = {}
+    try:
+        for mode, enable in (("disabled", False), ("enabled", True)):
+            tr.set_enabled(enable)
+            samples = []
+            for _ in range(reps):
+                t = tr.timer("bench.obs.compile")   # measures even when off
+                with t:
+                    compiler.compile(probe, stationary_mix)
+                samples.append(t.elapsed)
+            timings[mode] = statistics.median(samples)
+    finally:
+        tr.set_enabled(was_enabled)
+    overhead_pct = (timings["enabled"] / max(timings["disabled"], 1e-12)
+                    - 1.0) * 100.0
+
+    declared_plan = compiler.compile(probe, stationary_mix)
+    windows = fold(trace, window_s=window_s)
+    phased = [(w, compiler.compile(probe, w.mix)) for w in windows]
+    base = replay(trace, declared_plan, probe.lat, probe.bw)
+    ph = replay(trace, declared_plan, probe.lat, probe.bw, windows=phased)
+    return {
+        "bench": "obs",
+        "smoke": bool(smoke),
+        "n": n,
+        "seed": seed,
+        "compile": {
+            "disabled_s": round(timings["disabled"], 6),
+            "enabled_s": round(timings["enabled"], 6),
+            "overhead_pct": round(overhead_pct, 3),
+            "reps": reps,
+        },
+        "replay": {
+            "trace": trace.name,
+            "records": len(trace),
+            "windows": len(windows),
+            "declared_s": base["total_seconds"],
+            "phased_s": ph["total_seconds"],
+            "phased_beats_declared":
+                ph["total_seconds"] <= base["total_seconds"],
+            "unplanned": base["unplanned"] + ph["unplanned"],
+        },
+    }
+
+
+def cmd_bench_obs(args: argparse.Namespace) -> int:
+    """Observability scenario: tracing-overhead gate + capture→replay.
+
+    Fails (exit 1) if enabled-tracer overhead exceeds 10% (CI noise
+    headroom over the 2% budget recorded in BENCH_obs.json) or if the
+    phase-windowed plans lose to the single declared-mix plan."""
+    payload = run_obs_scenario(smoke=bool(args.smoke), seed=args.seed)
+    print(json.dumps(payload, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {args.out}")
+    if payload["compile"]["overhead_pct"] >= 10.0:
+        print("[bench] FAIL: enabled-tracer overhead "
+              f"{payload['compile']['overhead_pct']:.1f}% >= 10%")
+        return 1
+    if not payload["replay"]["phased_beats_declared"]:
+        print("[bench] FAIL: phase-windowed plans lost to the single "
+              "declared-mix plan on the bursty trace")
+        return 1
+    return 0
+
+
 def cmd_bench(args: argparse.Namespace) -> int:
     """Self-contained plan-pipeline benchmark (CI smoke + local sanity).
 
@@ -448,12 +555,15 @@ def cmd_bench(args: argparse.Namespace) -> int:
     facade applications use.
 
     ``--scenario faults`` switches to the churn/recovery scenario
-    (:func:`cmd_bench_faults`).
+    (:func:`cmd_bench_faults`); ``--scenario obs`` to the observability
+    overhead + capture→replay scenario (:func:`cmd_bench_obs`).
     """
     from repro.session import Session
 
     if getattr(args, "scenario", "plan") == "faults":
         return cmd_bench_faults(args)
+    if getattr(args, "scenario", "plan") == "obs":
+        return cmd_bench_obs(args)
     sizes = [16] if args.smoke else [32, 64]
     iters = 200 if args.smoke else 800
     results: List[Dict[str, Any]] = []
@@ -465,12 +575,14 @@ def cmd_bench(args: argparse.Namespace) -> int:
             cache={"dir": None},
             solver={"budget": {"iters": iters, "chains": 4}})
         with Session(cfg) as s:
-            t0 = time.perf_counter()
-            plan = s.plan()
-            cold_s = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            s.service.request(s.probe, s.mix)        # warm: LRU probe
-            warm_s = time.perf_counter() - t0
+            cold = obs.tracer().timer("bench.cold_compile", n=n)
+            with cold:
+                plan = s.plan()
+            cold_s = cold.elapsed
+            warm = obs.tracer().timer("bench.warm_hit", n=n)
+            with warm:
+                s.service.request(s.probe, s.mix)    # warm: LRU probe
+            warm_s = warm.elapsed
             speedups = [
                 e.best_identity_time / max(e.expected_time, 1e-30)
                 for e in plan.entries.values()
@@ -499,6 +611,110 @@ def cmd_bench(args: argparse.Namespace) -> int:
         if row["cache_hits"] < 1:
             print("[bench] FAIL: warm request missed the plan cache")
             return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# status / trace
+# ---------------------------------------------------------------------------
+
+def cmd_status(args: argparse.Namespace) -> int:
+    """Print the process obs-metrics snapshot (JSON or Prometheus text).
+
+    By default a small dry-run session (attach + plan, no cache writes)
+    is driven first so the snapshot reflects a live pipeline; pass
+    ``--no-run`` to dump whatever the process has already recorded.
+    """
+    cfg = session_config_from_args(args)
+    if _maybe_dump(args, cfg):
+        return 0
+    if not args.no_run:
+        from repro.session import Session
+
+        run_cfg = cfg.replace(
+            mesh={"shape": ()}, cache={"dir": None},
+            **({} if args.iters is not None
+               else {"solver": {"budget": {"iters": 60, "chains": 2}}}))
+        with Session(run_cfg) as s:
+            s.attach()
+            s.plan()
+    m = obs.metrics()
+    if args.format == "prom":
+        sys.stdout.write(m.to_prometheus())
+    else:
+        print(json.dumps(m.snapshot(), indent=1))
+    return 0
+
+
+def cmd_trace_export(args: argparse.Namespace) -> int:
+    """Run the planning pipeline under the tracer, export Chrome JSON.
+
+    The artifact loads in ``chrome://tracing`` and https://ui.perfetto.dev.
+    """
+    cfg = session_config_from_args(args)
+    if _maybe_dump(args, cfg):
+        return 0
+    from repro.session import Session
+
+    tr = obs.tracer()
+    tr.set_enabled(True)
+    run_cfg = cfg.replace(
+        mesh={"shape": ()}, cache={"dir": None},
+        **({} if args.iters is not None
+           else {"solver": {"budget": {"iters": 60, "chains": 2}}}))
+    with Session(run_cfg) as s:
+        s.attach()
+        s.plan()
+    n_events = tr.export(args.out)
+    print(f"[trace] wrote {n_events} events to {args.out} "
+          f"(open in chrome://tracing or ui.perfetto.dev)")
+    return 0
+
+
+def cmd_trace_replay(args: argparse.Namespace) -> int:
+    """Replay a captured (or synthetic bursty) workload trace.
+
+    Compares the single declared-mix plan against per-phase-window
+    plans compiled from the folded trace; prints both totals.
+    """
+    from repro.fabric import make_datacenter, probe_fabric, scramble
+    from repro.obs import (WorkloadTrace, declared_mix, fold, replay,
+                           synthetic_bursty_trace)
+    from repro.plan import PlanCompiler, SolveBudget
+
+    if args.trace:
+        trace = WorkloadTrace.load(args.trace)
+        n = int(trace.meta.get("n", args.nodes or 16))
+    else:
+        n = args.nodes or 16          # session-args --nodes, default 16
+        trace = synthetic_bursty_trace(n, seed=args.seed)
+    if not len(trace):
+        print("[trace] empty trace: nothing to replay")
+        return 1
+    fab, _ = scramble(make_datacenter(n, seed=args.seed),
+                      seed=args.seed + 1)
+    probe = probe_fabric(fab, seed=args.seed)
+    compiler = PlanCompiler(
+        budget=SolveBudget(iters=args.iters or 200, chains=2))
+    declared_plan = compiler.compile(probe, declared_mix(trace))
+    windows = fold(trace, window_s=args.window)
+    phased = [(w, compiler.compile(probe, w.mix)) for w in windows]
+    base = replay(trace, declared_plan, probe.lat, probe.bw)
+    ph = replay(trace, declared_plan, probe.lat, probe.bw, windows=phased)
+    print(f"[trace] replay {trace.name}: {len(trace)} records, "
+          f"{len(windows)} phase windows (window={args.window}s), n={n}")
+    print(f"  declared-mix plan : {base['total_seconds'] * 1e3:.3f}ms "
+          f"({base['unplanned']} unplanned)")
+    print(f"  phase-window plans: {ph['total_seconds'] * 1e3:.3f}ms "
+          f"({ph['unplanned']} unplanned)")
+    win = base["total_seconds"] / max(ph["total_seconds"], 1e-30)
+    print(f"  phased vs declared: {win:.4f}x")
+    if args.out:
+        payload = {"trace": trace.name, "n": n, "windows": len(windows),
+                   "declared": base, "phased": ph}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[trace] wrote {args.out}")
     return 0
 
 
@@ -557,13 +773,44 @@ def build_parser() -> argparse.ArgumentParser:
     _add_session_args(p)
     p.add_argument("--smoke", action="store_true",
                    help="one small fabric (CI)")
-    p.add_argument("--scenario", default="plan", choices=["plan", "faults"],
+    p.add_argument("--scenario", default="plan",
+                   choices=["plan", "faults", "obs"],
                    help="plan: compile/cache pipeline; faults: seeded "
-                        "churn with ladder recovery")
+                        "churn with ladder recovery; obs: tracing "
+                        "overhead + capture/replay")
     p.add_argument("--seed", type=int, default=0,
-                   help="fault-schedule seed (faults scenario)")
+                   help="scenario seed (faults schedule / obs trace)")
     p.add_argument("--out", default=None, help="write bench JSON here")
     p.set_defaults(fn=cmd_bench)
+
+    p = sub.add_parser("status",
+                       help="obs metrics snapshot (json or prometheus)")
+    _add_session_args(p)
+    p.add_argument("--format", default="json", choices=["json", "prom"])
+    p.add_argument("--no-run", action="store_true",
+                   help="skip the dry-run pipeline; dump current metrics")
+    p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("trace", help="export or replay obs traces")
+    tsub = p.add_subparsers(dest="trace_cmd", required=True)
+
+    t = tsub.add_parser("export",
+                        help="run the pipeline traced, write Chrome JSON")
+    _add_session_args(t)
+    t.add_argument("--out", default="trace.json",
+                   help="Chrome trace-event JSON path")
+    t.set_defaults(fn=cmd_trace_export)
+
+    t = tsub.add_parser("replay",
+                        help="replay a captured/synthetic workload trace")
+    _add_session_args(t)
+    t.add_argument("--trace", default=None,
+                   help="WorkloadTrace JSON (default: synthetic bursty)")
+    t.add_argument("--window", type=float, default=1.0,
+                   help="fold window seconds")
+    t.add_argument("--seed", type=int, default=0)
+    t.add_argument("--out", default=None, help="write comparison JSON here")
+    t.set_defaults(fn=cmd_trace_replay)
 
     return ap
 

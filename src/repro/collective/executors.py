@@ -182,19 +182,25 @@ class JaxExecutor:
         return program.algorithm in _RING_ALGOS + _SHIFT_ALGOS
 
     def lower(self, program: Program) -> Lowered:
-        lp = tuple(int(i) for i in program.local_perm)
-        n = program.n
-        links = tuple((lp[i], lp[(i + 1) % n]) for i in range(n))
-        if program.algorithm in _RING_ALGOS:
-            return Lowered(kind="ring", order=lp, links=links,
-                           fingerprint=program.fingerprint())
-        if program.algorithm in _SHIFT_ALGOS:
-            shift_rounds = tuple(
-                tuple(sorted((lp[f.src], lp[f.dst]) for f in rnd))
-                for rnd in program.rounds)
-            return Lowered(kind="shift_a2a", order=lp, links=links,
-                           shift_rounds=shift_rounds,
-                           fingerprint=program.fingerprint())
+        from repro import obs
+
+        with obs.tracer().span("collective.lower",
+                               algo=program.algorithm, n=program.n):
+            lp = tuple(int(i) for i in program.local_perm)
+            n = program.n
+            links = tuple((lp[i], lp[(i + 1) % n]) for i in range(n))
+            if program.algorithm in _RING_ALGOS:
+                obs.metrics().counter("collective.lowered.ring").inc()
+                return Lowered(kind="ring", order=lp, links=links,
+                               fingerprint=program.fingerprint())
+            if program.algorithm in _SHIFT_ALGOS:
+                shift_rounds = tuple(
+                    tuple(sorted((lp[f.src], lp[f.dst]) for f in rnd))
+                    for rnd in program.rounds)
+                obs.metrics().counter("collective.lowered.shift_a2a").inc()
+                return Lowered(kind="shift_a2a", order=lp, links=links,
+                               shift_rounds=shift_rounds,
+                               fingerprint=program.fingerprint())
         raise NotImplementedError(
             f"JaxExecutor cannot lower {program.algorithm!r} programs; "
             f"lowerable algorithms: {_RING_ALGOS + _SHIFT_ALGOS}")

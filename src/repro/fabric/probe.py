@@ -25,6 +25,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+
 from .costs import combine_cost
 from .topology import Fabric
 
@@ -99,22 +101,28 @@ def probe_fabric(
     garbage matrices that only fail much later, inside the solver.
     """
     _validate_probe_params(n_probes, percentile, noise_scale)
-    rng = np.random.default_rng(seed)
-    n = fabric.n
-    # Draw per-pair percentile noise factors (each directed pair gets its
-    # own probe population — simulated via per-pair percentile draws).
-    noise = rng.exponential(noise_scale, size=(n, n, 16))
-    pct = np.percentile(noise, percentile, axis=-1)
-    lat = fabric.lat * (1.0 + pct)
-    np.fill_diagonal(lat, 0.0)
-    lat = np.maximum(lat, lat.T)
-    bw = None
-    if measure_bw:
-        # Bandwidth estimate from a burst probe (degraded by sampled load).
-        load = np.clip(rng.normal(0.0, 0.05, size=(n, n)), -0.15, 0.3)
-        bw = fabric.bw * (1.0 - load)
-        bw = np.minimum(bw, bw.T)
-        np.fill_diagonal(bw, np.inf)
+    timer = obs.tracer().timer("fabric.probe.dense", n=fabric.n)
+    with timer:
+        rng = np.random.default_rng(seed)
+        n = fabric.n
+        # Draw per-pair percentile noise factors (each directed pair gets
+        # its own probe population — simulated via per-pair percentile
+        # draws).
+        noise = rng.exponential(noise_scale, size=(n, n, 16))
+        pct = np.percentile(noise, percentile, axis=-1)
+        lat = fabric.lat * (1.0 + pct)
+        np.fill_diagonal(lat, 0.0)
+        lat = np.maximum(lat, lat.T)
+        bw = None
+        if measure_bw:
+            # Bandwidth estimate from a burst probe (degraded by load).
+            load = np.clip(rng.normal(0.0, 0.05, size=(n, n)), -0.15, 0.3)
+            bw = fabric.bw * (1.0 - load)
+            bw = np.minimum(bw, bw.T)
+            np.fill_diagonal(bw, np.inf)
+    m = obs.metrics()
+    m.counter("fabric.probe.sweeps").inc()
+    m.histogram("fabric.probe.seconds", scale=1e-3).observe(timer.elapsed)
     return ProbeResult(lat=lat, bw=bw, n_probes=n_probes, percentile=percentile)
 
 

@@ -37,6 +37,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .hierarchy import HierarchyModel, infer_hierarchy
 from .probe import ProbeResult, _validate_probe_params
 from .topology import Fabric
@@ -230,6 +232,25 @@ def _complete(mat: np.ndarray, observed: np.ndarray, labels: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def sparse_probe_fabric(
+    fabric: Fabric,
+    budget: float = 0.25,
+    **kwargs,
+) -> SparseProbeResult:
+    """Instrumented front-end of :func:`_sparse_probe_fabric` (same
+    signature): the sweep runs under an obs timer, feeding the
+    ``fabric.probe.seconds`` latency histogram and the probes-used
+    gauge that make the sparse budget observable in ``repro status``."""
+    timer = obs.tracer().timer("fabric.probe.sparse", n=fabric.n)
+    with timer:
+        result = _sparse_probe_fabric(fabric, budget=budget, **kwargs)
+    m = obs.metrics()
+    m.counter("fabric.probe.sweeps").inc()
+    m.histogram("fabric.probe.seconds", scale=1e-3).observe(timer.elapsed)
+    m.gauge("fabric.probe.sparse.probes_used").set(result.probes_used)
+    return result
+
+
+def _sparse_probe_fabric(
     fabric: Fabric,
     budget: float = 0.25,
     n_probes: int = 1000,
@@ -490,6 +511,12 @@ def refresh_sparse(
             bw = _complete(np.where(observed, bw, np.inf), observed,
                            labels, "bw")
     hierarchy = infer_hierarchy(lat) if moved else prev.hierarchy
+    m = obs.metrics()
+    m.counter("fabric.refresh.ticks").inc()
+    if moved:
+        m.counter("fabric.refresh.moved_clusters").inc(len(moved))
+        obs.tracer().event("fabric.refresh.moved", clusters=list(moved),
+                           probes=2 * probe_count)
     return SparseProbeResult(
         lat=lat, bw=bw, n_probes=prev.n_probes, percentile=percentile,
         hierarchy=hierarchy, probes_used=2 * probe_count,

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro import obs
+
 __all__ = ["HEALTH_STATES", "HealthTracker"]
 
 HEALTH_STATES = ("healthy", "degraded", "halted")
@@ -86,4 +88,10 @@ class HealthTracker:
     def _enter(self, state: str, reason: str) -> str:
         self.state = state
         self.transitions.append((state, reason))
+        # the single transition point: every health edge is one obs
+        # event + the numeric gauge dashboards alert on
+        obs.tracer().event("faults.health", state=state, reason=reason)
+        m = obs.metrics()
+        m.counter(f"faults.health.{state}").inc()
+        m.gauge("faults.health.state").set(HEALTH_STATES.index(state))
         return state

@@ -33,11 +33,11 @@ candidates, scored at the warm-started order.
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.collective import candidates as builder_candidates
 from repro.collective import get_builder
 from repro.core.cost_models import RingCost, make_cost_model
@@ -211,6 +211,7 @@ def recover_entry(entry, old_to_new: Dict[int, int],
     if not np.isfinite(chosen_t) or chosen_t > ident_t:
         chosen, chosen_t, rung = identity_local, ident_t, "identity"
 
+    obs.metrics().counter(f"faults.ladder.{rung}").inc()
     new = PlanEntry(
         op=entry.op, bucket=entry.bucket, size_bytes=entry.size_bytes,
         group=tuple(members), algo=algo, algo_kwargs=dict(akw),
@@ -239,24 +240,31 @@ def recover_plan(plan, old_to_new: Dict[int, int],
     from repro.plan.cache import fabric_fingerprint
     from repro.plan.compiler import Plan
 
-    t0 = time.perf_counter()
-    n_new = lat.shape[0]
-    entries = {}
-    rungs: Dict[Tuple, str] = {}
-    for key, entry in plan.entries.items():
-        was_full = len(entry.group) == plan.n
-        new_entry, rung = recover_entry(
-            entry, old_to_new, lat, bw,
-            append_new=tuple(joiners) if was_full else (),
-            hierarchy=hierarchy, sweeps=sweeps, seed=seed)
-        rungs[key] = rung
-        if new_entry is not None:
-            entries[(new_entry.op, new_entry.bucket, new_entry.group)] = \
-                new_entry
-    fp = fabric_fingerprint(lat, bw, hierarchy=hierarchy)
+    # the obs timer replaces the ad-hoc perf_counter pair: recovery
+    # latency is a product number (compile_seconds of the recovered
+    # plan) and a trace span whenever tracing is on
+    timer = obs.tracer().timer("faults.recover_plan",
+                               entries=len(plan.entries))
+    with timer:
+        n_new = lat.shape[0]
+        entries = {}
+        rungs: Dict[Tuple, str] = {}
+        for key, entry in plan.entries.items():
+            was_full = len(entry.group) == plan.n
+            new_entry, rung = recover_entry(
+                entry, old_to_new, lat, bw,
+                append_new=tuple(joiners) if was_full else (),
+                hierarchy=hierarchy, sweeps=sweeps, seed=seed)
+            rungs[key] = rung
+            if new_entry is not None:
+                entries[(new_entry.op, new_entry.bucket, new_entry.group)] = \
+                    new_entry
+        fp = fabric_fingerprint(lat, bw, hierarchy=hierarchy)
+    obs.metrics().histogram("faults.recover.seconds", scale=1e-3).observe(
+        timer.elapsed)
     new_plan = Plan(
         fingerprint=fp, n=n_new, entries=entries, mesh_plan=None,
-        compile_seconds=time.perf_counter() - t0, mix_key=plan.mix_key,
+        compile_seconds=timer.elapsed, mix_key=plan.mix_key,
         meta=dict(plan.meta,
                   recovered_from=plan.fingerprint.digest,
                   rungs={str(k): v for k, v in rungs.items()},
@@ -280,4 +288,6 @@ def identity_fallback(plan) -> int:
             entry.perm = ident
             changed += 1
     plan.meta["fallback"] = "identity"
+    obs.tracer().event("faults.identity_fallback", changed=changed)
+    obs.metrics().counter("faults.identity_fallbacks").inc()
     return changed

@@ -32,6 +32,8 @@ from typing import Any, Callable, Optional, TypeVar
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["RetryPolicy", "RetryError", "call_with_retries"]
 
 T = TypeVar("T")
@@ -141,7 +143,11 @@ def call_with_retries(
             if attempt >= policy.max_retries:
                 break
             d = policy.delay(attempt + 1, rng)
+            obs.metrics().counter("faults.retry.attempts").inc()
+            obs.tracer().event("faults.retry", attempt=attempt + 1,
+                               delay_s=d, error=repr(e))
             if on_retry is not None:
                 on_retry(attempt + 1, e, d)
             sleep(d)
+    obs.metrics().counter("faults.retry.exhausted").inc()
     raise RetryError(policy.max_retries + 1, last)

@@ -305,6 +305,20 @@ def moe_a2a(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarr
             y = y + mlp(shared_full, xf)
         return y.reshape(Bl, Sl, D), aux
 
+    # two EP all-to-alls per layer call (dispatch + return trip), each
+    # moving the packed capacity buffer; recorded at trace time since
+    # the in-jit body cannot call back into python
+    from repro import obs
+
+    rec = obs.recorder()
+    if rec.enabled:
+        C = max(int(math.ceil(
+            B * S // max(math.prod(sizes[a] for a in batch_axes), 1)
+            * K / n_ep * cfg.capacity_factor)), K)
+        a2a_bytes = float(n_ep * C * D * x.dtype.itemsize)
+        rec.record("all-to-all", a2a_bytes)
+        rec.record("all-to-all", a2a_bytes)
+
     f = jax.shard_map(
         body, mesh=mesh,
         in_specs=(w_spec, x_spec),

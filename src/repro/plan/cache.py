@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.cost_models import make_cost_model
 from repro.core.dynamic import AdaptiveReranker
 
@@ -251,13 +252,16 @@ class PlanCache:
                         fingerprint.matches(plan.fingerprint, self.tol):
                     self._mem.move_to_end(key)
                     self.stats["hits"] += 1
+                    obs.metrics().counter("plan.cache.hits").inc()
                     return plan
             plan = self._load_from_store(fingerprint, request_key)
             if plan is not None:
                 self._insert(plan, request_key)
                 self.stats["disk_hits"] += 1
+                obs.metrics().counter("plan.cache.disk_hits").inc()
                 return plan
             self.stats["misses"] += 1
+            obs.metrics().counter("plan.cache.misses").inc()
             return None
 
     def peek_mem(self, fingerprint: FabricFingerprint,
@@ -278,6 +282,7 @@ class PlanCache:
         with self._lock:
             self._insert(plan, request_key)
             self.stats["puts"] += 1
+            obs.metrics().counter("plan.cache.puts").inc()
             if self.store_dir:
                 path = self._path(plan.fingerprint, request_key)
                 tmp = path + ".tmp"
@@ -314,6 +319,8 @@ class PlanCache:
                         except OSError:
                             pass
             self.stats["invalidations"] += dropped
+            if dropped:
+                obs.metrics().counter("plan.cache.invalidations").inc(dropped)
         return dropped
 
     def __len__(self) -> int:
@@ -347,10 +354,17 @@ class PlanCache:
             note = f"quarantined as {fname}.corrupt"
         except OSError as rename_err:
             note = f"quarantine rename failed: {rename_err}"
+        obs.tracer().event("plan.cache.quarantine", file=fname,
+                           error=f"{type(error).__name__}: {error}")
+        obs.metrics().counter("plan.cache.quarantines").inc()
+        # stacklevel walks _quarantine -> _store_index/_load_from_store
+        # -> get/invalidate -> the caller outside the cache (4 frames):
+        # the warning should point at whoever asked for the plan, not at
+        # cache internals
         warnings.warn(
             f"plan cache store file {fname} is corrupted "
             f"({type(error).__name__}: {error}); {note}",
-            RuntimeWarning, stacklevel=3)
+            RuntimeWarning, stacklevel=4)
 
     def _store_index(self) -> List[Tuple[str, Optional[FabricFingerprint],
                                          Optional[str]]]:
@@ -494,5 +508,16 @@ class DriftMonitor:
             self.plan.meta["stale"] = True
             if self.cache is not None:
                 invalidated = self.cache.invalidate(self.plan.fingerprint)
+        m = obs.metrics()
+        m.counter("drift.observations").inc()
+        m.gauge("drift.degraded_entries").set(len(degraded))
+        # drift score: fraction of plan entries past their reranker
+        # threshold this observation — 0.0 on a quiet fabric
+        m.gauge("drift.score").set(
+            len(degraded) / max(len(self.plan.entries), 1))
+        if stale:
+            m.counter("drift.stale").inc()
+            obs.tracer().event("drift.stale", degraded=len(degraded),
+                               invalidated=invalidated)
         return DriftReport(stale=stale, degraded=degraded,
                            repaired=repaired, invalidated=invalidated)

@@ -24,6 +24,7 @@ import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.faults.retry import RetryPolicy, call_with_retries
 
 from .cache import PlanCache, fabric_fingerprint
@@ -73,11 +74,13 @@ class PlanningService:
         cached = self.cache.get(fp, request_key)
         with self._lock:
             self.stats["requests"] += 1
+            obs.metrics().counter("plan.service.requests").inc()
             if cached is None:
                 # a compile may have landed between the lookup and here
                 cached = self.cache.peek_mem(fp, request_key)
             if cached is not None:
                 self.stats["cache_hits"] += 1
+                obs.metrics().counter("plan.service.cache_hits").inc()
                 fut: Future = Future()
                 fut.set_result(cached)
                 return fut
@@ -88,6 +91,7 @@ class PlanningService:
                 in_fp = self._inflight_fp.get((digest, rk))
                 if in_fp is not None and fp.matches(in_fp, self.cache.tol):
                     self.stats["dedup_joins"] += 1
+                    obs.metrics().counter("plan.service.dedup_joins").inc()
                     return fut
             key = (fp.digest, request_key)
             fut = self._pool.submit(self._compile, key, fp, probe, mix,
@@ -158,12 +162,14 @@ class PlanningService:
                     probe, mix, mesh_shape=mesh_shape, axis_names=axis_names,
                     fingerprint=fp)
 
-            if self.retry is not None:
-                plan = call_with_retries(compile_once, self.retry)
-            else:
-                plan = compile_once()
+            with obs.tracer().span("plan.service.compile", mix=mix.name):
+                if self.retry is not None:
+                    plan = call_with_retries(compile_once, self.retry)
+                else:
+                    plan = compile_once()
             with self._lock:
                 self.stats["compiles"] += 1
+                obs.metrics().counter("plan.service.compiles").inc()
             self.cache.put(plan, request_key)
             return plan
         finally:

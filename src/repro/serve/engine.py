@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 __all__ = ["GenerationConfig", "GenerationEngine", "make_serve_step"]
 
 
@@ -136,24 +138,37 @@ class GenerationEngine:
         tokens = jnp.asarray(prompts, dtype=jnp.int32)
         P = tokens.shape[1]
 
-        logits, cache = self._prefill(self.params, tokens, frontend_embeds)
+        with obs.tracer().span("serve.prefill", batch=B, prompt_len=P):
+            logits, cache = self._prefill(self.params, tokens, frontend_embeds)
         self.stats["prefill_tokens"] += B * P
         # grow the cache to P + max_new slots
         cache = _grow_cache(cache, P, P + max_new)
 
+        # TP decode issues an all-gather + reduce-scatter of the step's
+        # activations per layer; the per-step logits block is the
+        # observable proxy for that payload on a single-host run
+        act_bytes = float(logits.size * logits.dtype.itemsize)
+        rec = obs.recorder()
         rng = jax.random.PRNGKey(self.cfg.seed)
         out = np.zeros((B, max_new), dtype=np.int32)
         finished = np.zeros(B, dtype=bool)
         cur = self._sample(logits, rng)
-        for t in range(max_new):
-            out[:, t] = np.where(finished, self.cfg.eos_token, np.asarray(cur))
-            finished |= np.asarray(cur) == self.cfg.eos_token
-            if finished.all():
-                break
-            rng, sub = jax.random.split(rng)
-            logits, cache = self._decode(self.params, cur, cache)
-            self.stats["decode_steps"] += 1
-            cur = self._sample(logits, sub)
+        timer = obs.tracer().timer("serve.decode", batch=B)
+        with timer:
+            for t in range(max_new):
+                out[:, t] = np.where(
+                    finished, self.cfg.eos_token, np.asarray(cur))
+                finished |= np.asarray(cur) == self.cfg.eos_token
+                if finished.all():
+                    break
+                rng, sub = jax.random.split(rng)
+                logits, cache = self._decode(self.params, cur, cache)
+                self.stats["decode_steps"] += 1
+                rec.record("all-gather", act_bytes)
+                rec.record("reduce-scatter", act_bytes)
+                cur = self._sample(logits, sub)
+            timer.set(steps=t + 1)
+        obs.metrics().counter("serve.waves").inc()
         return [row[: _trim(row, self.cfg.eos_token)].tolist() for row in out]
 
 

@@ -19,6 +19,7 @@ from .config import (  # noqa: F401
     DriftConfig,
     FabricConfig,
     MeshConfig,
+    ObsConfig,
     ProbeConfig,
     RetryPolicy,
     SessionConfig,

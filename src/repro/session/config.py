@@ -13,7 +13,10 @@ Every knob that was previously hand-threaded through ``core`` / ``plan``
 * :class:`DriftConfig` — drift threshold and re-plan policy;
 * :class:`repro.faults.RetryPolicy` — probe/re-plan backoff and the
   monitor's degraded/halted health thresholds (the ``retry`` section);
-* :class:`MeshConfig` — N-D mesh shape + axis names.
+* :class:`MeshConfig` — N-D mesh shape + axis names;
+* :class:`ObsConfig` — observability: tracing on/off + ring-buffer
+  size, workload capture, metrics, and export paths (see
+  :mod:`repro.obs`).
 
 The tree round-trips through plain dicts (:meth:`SessionConfig.to_dict`
 / :meth:`SessionConfig.from_dict`), JSON files (:meth:`SessionConfig.load`
@@ -41,6 +44,7 @@ __all__ = [
     "CacheConfig",
     "DriftConfig",
     "MeshConfig",
+    "ObsConfig",
     "RetryPolicy",
     "SessionConfig",
 ]
@@ -157,6 +161,27 @@ class MeshConfig:
                 f"vs axis_names {names}")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability switches (see :mod:`repro.obs`).
+
+    A session applies this section to the process-global tracer /
+    metrics registry / workload recorder on attach
+    (:func:`repro.obs.configure`); the env overlay spells it
+    ``REPRO_OBS_ENABLED=1``, ``REPRO_OBS_CAPTURE=1``,
+    ``REPRO_OBS_EXPORT_PATH=trace.json`` etc.
+    """
+
+    enabled: bool = False              # span/event tracing
+    buffer: int = 8192                 # tracer ring-buffer records
+    metrics: bool = True               # counter/gauge/histogram registry
+    capture: bool = False              # workload (op, bytes, group, t) capture
+    #: write the Chrome trace here on Session.close() (None = don't)
+    export_path: Optional[str] = None
+    #: write the captured WorkloadTrace JSON here on Session.close()
+    capture_path: Optional[str] = None
+
+
 _SECTIONS: Dict[str, type] = {
     "fabric": FabricConfig,
     "probe": ProbeConfig,
@@ -165,6 +190,7 @@ _SECTIONS: Dict[str, type] = {
     "drift": DriftConfig,
     "retry": RetryPolicy,
     "mesh": MeshConfig,
+    "obs": ObsConfig,
 }
 
 
@@ -234,6 +260,7 @@ class SessionConfig:
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
     #: dominant collective payload of the workload (bytes)
     payload_bytes: float = 4e6
     #: workload shape for the default job mix ("train" | "serve")

@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.fabric import (
     Fabric,
     ProbeResult,
@@ -65,7 +66,7 @@ from repro.plan import (
     PlanningService,
 )
 
-from .config import SessionConfig
+from .config import ObsConfig, SessionConfig
 from .mixes import default_mix
 
 __all__ = ["Session", "SessionError", "AppliedPlan", "EVENTS"]
@@ -136,6 +137,11 @@ class Session:
         self.config = (config or SessionConfig())
         if overrides:
             self.config = self.config.replace(**overrides)
+        # apply a non-default obs section to the process singletons; the
+        # default section is left alone so a tracer a test (or another
+        # session) enabled explicitly is not silently disabled here
+        if self.config.obs != ObsConfig():
+            obs.configure(self.config.obs)
         self.state = "created"
         self.events: List[Tuple[str, Dict[str, Any]]] = []
         self._hooks: Dict[str, List[Callable]] = {e: [] for e in EVENTS}
@@ -213,13 +219,15 @@ class Session:
         """
         self._require_open("attach")
         cfg = self.config
-        if probe is not None and not isinstance(probe, ProbeResult):
-            lat = np.asarray(probe, dtype=np.float64)
-            probe = ProbeResult(lat=lat)
-        if fabric is None and probe is None:
-            fabric, probe = self._build_configured_fabric()
-        elif probe is None:
-            probe = self._probe_fabric(fabric)
+        with obs.tracer().span("session.attach", kind=cfg.fabric.kind):
+            if probe is not None and not isinstance(probe, ProbeResult):
+                lat = np.asarray(probe, dtype=np.float64)
+                probe = ProbeResult(lat=lat)
+            if fabric is None and probe is None:
+                fabric, probe = self._build_configured_fabric()
+            elif probe is None:
+                probe = self._probe_fabric(fabric)
+        obs.metrics().counter("session.attaches").inc()
         with self._lock:
             self._fabric = fabric
             self._oracle_fabric = fabric
@@ -333,8 +341,12 @@ class Session:
                 f"{int(np.prod(mesh_shape))} nodes but the attached "
                 f"fabric has {self._probe.n}; attach a matching fabric "
                 f"or fix mesh.shape in the session config")
-        plan = self.service.request(
-            self._probe, mix, mesh_shape=mesh_shape, axis_names=axis_names)
+        with obs.tracer().span("session.plan", mix=mix.name) as sp:
+            plan = self.service.request(
+                self._probe, mix, mesh_shape=mesh_shape,
+                axis_names=axis_names)
+            sp.set(entries=len(plan.entries),
+                   digest=plan.fingerprint.digest)
         with self._lock:
             self._plan = plan
             self._mix = mix
@@ -408,9 +420,12 @@ class Session:
         plan = self._plan if self._plan is not None else self.plan()
         order = None
         mesh = None
-        if plan.mesh_plan is not None:
-            order = plan.mesh_plan.flat
-            mesh = self._try_build_mesh(plan, devices)
+        with obs.tracer().span("session.apply",
+                               digest=plan.fingerprint.digest):
+            if plan.mesh_plan is not None:
+                order = plan.mesh_plan.flat
+                mesh = self._try_build_mesh(plan, devices)
+        obs.metrics().counter("session.applies").inc()
         applied = AppliedPlan(plan=plan, order=order, mesh=mesh,
                               hints=self.hints())
         with self._lock:
@@ -432,6 +447,10 @@ class Session:
         except Exception as e:                 # no jax / wrong backend
             # Never silently drop the reordering the system exists to
             # apply: the caller decides how to proceed on mesh=None.
+            # stacklevel walks _try_build_mesh -> apply -> apply's caller
+            # (3 frames): the warning points at application code.
+            obs.tracer().event("session.mesh_build_failed", error=repr(e))
+            obs.metrics().counter("session.mesh_build_failures").inc()
             warnings.warn(
                 f"session could not build the reordered mesh ({e!r}); "
                 f"AppliedPlan.mesh is None — apply the plan's order "
@@ -544,7 +563,9 @@ class Session:
         self._require_open("observe")
         if self._drift is None:
             raise SessionError("observe() needs a plan; call plan() first")
-        report = self._drift.observe(cost_matrix_now)
+        with obs.tracer().span("session.observe") as sp:
+            report = self._drift.observe(cost_matrix_now)
+            sp.set(stale=report.stale, degraded=len(report.degraded))
         if report.stale:
             self._fire("drift", report=report)
             if self.config.drift.auto_replan:
@@ -594,8 +615,10 @@ class Session:
             if self._service is not None:      # rebuild on the new oracle
                 self._service.close()
                 self._service = None
-        plan = self.plan(mix=self._mix, mesh_shape=self._mesh_shape,
-                         axis_names=self._axis_names)
+        with obs.tracer().span("session.replan"):
+            plan = self.plan(mix=self._mix, mesh_shape=self._mesh_shape,
+                             axis_names=self._axis_names)
+        obs.metrics().counter("session.replans").inc()
         self._fire("replan", plan=plan, previous=old)
         return plan
 
@@ -639,10 +662,13 @@ class Session:
         rng = np.random.default_rng(policy.seed)
 
         def tick() -> None:
-            c = poll()
-            if c is not None and self.state != "closed" \
-                    and self._drift is not None:
-                self.observe(c)
+            obs.metrics().counter("session.monitor.ticks").inc()
+            with obs.tracer().span("session.monitor.tick") as sp:
+                c = poll()
+                sp.set(observed=c is not None)
+                if c is not None and self.state != "closed" \
+                        and self._drift is not None:
+                    self.observe(c)
 
         def loop() -> None:
             while not self._monitor_stop.wait(interval):
@@ -651,6 +677,7 @@ class Session:
                 try:
                     tick()
                 except Exception as e:
+                    obs.metrics().counter("session.monitor.failures").inc()
                     entered = self._health.record_failure(repr(e))
                     if entered == "degraded":
                         self._safe_fire("degraded", state="degraded",
@@ -680,6 +707,11 @@ class Session:
         try:
             self._fire(event, **info)
         except Exception as e:
+            # stacklevel=2 points at the monitor-loop frame that fired
+            # the hook — there is no user frame above a daemon thread
+            obs.tracer().event("session.hook_error", event=event,
+                               error=repr(e))
+            obs.metrics().counter("session.hook_errors").inc()
             warnings.warn(
                 f"session {event!r} hook raised {e!r}; monitor continues",
                 RuntimeWarning, stacklevel=2)
@@ -981,4 +1013,30 @@ class Session:
                 self._service.close()
                 self._service = None
             self.state = "closed"
+        obs.metrics().counter("session.closes").inc()
+        self._export_obs()
         self._fire("close")
+
+    def _export_obs(self) -> None:
+        """Write configured obs artifacts (trace / capture) on close.
+
+        Export failures warn instead of raising: close() must stay
+        usable from error paths and __exit__.
+        """
+        cfg = self.config.obs
+        if cfg.export_path:
+            try:
+                obs.tracer().export(cfg.export_path)
+            except Exception as e:
+                warnings.warn(
+                    f"session could not export the obs trace to "
+                    f"{cfg.export_path!r} ({e!r})",
+                    RuntimeWarning, stacklevel=3)
+        if cfg.capture_path:
+            try:
+                obs.recorder().trace(name="session").save(cfg.capture_path)
+            except Exception as e:
+                warnings.warn(
+                    f"session could not save the workload capture to "
+                    f"{cfg.capture_path!r} ({e!r})",
+                    RuntimeWarning, stacklevel=3)

@@ -27,12 +27,12 @@ exercise.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.core import (
     AdaptiveReranker,
@@ -181,6 +181,7 @@ class Trainer:
         self.ckpt = AsyncCheckpointer(cfg.ckpt_dir)
         self.history: List[Dict[str, float]] = []
         self.restarts = 0
+        self._cached_param_bytes: Optional[float] = None
         self.rerank_events: List[int] = []
         if cluster is not None:
             if cluster.session is not None:
@@ -232,15 +233,30 @@ class Trainer:
                 if failed:
                     raise NodeFailure(failed)
             batch = next(self.batches)
-            t0 = time.perf_counter()
-            self.state, metrics = self.step_fn(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            timer = obs.tracer().timer("train.step", step=step + 1)
+            with timer:
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            dt = timer.elapsed
             step += 1
+            obs.metrics().counter("train.steps").inc()
+            # the data-parallel gradient all-reduce is the step's one
+            # fleet-wide collective; its payload is the parameter bytes
+            obs.recorder().record("all-reduce", self._param_bytes())
             self._observe_step(step, dt, metrics)
             if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
                 self.ckpt.save(step, self.state)
         return step
+
+    def _param_bytes(self) -> float:
+        """Total parameter bytes (the per-step all-reduce payload)."""
+        if self._cached_param_bytes is None:
+            params = getattr(self.state, "params", None)
+            self._cached_param_bytes = float(sum(
+                x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(params)
+                if hasattr(x, "size") and hasattr(x, "dtype")))
+        return self._cached_param_bytes
 
     def _observe_step(self, step: int, dt: float, metrics: Dict) -> None:
         if step % self.cfg.log_every == 0 or step <= 2:
