@@ -1,0 +1,171 @@
+"""Static-verifier benchmark: gate cost, mutant kill rate, efficiency.
+
+The verifier (:mod:`repro.analysis`, DESIGN.md §11) now gates every
+plan compile, so three numbers must be committed and tracked:
+
+* **verifier µs/program** — the gate passes (validate + deps +
+  liveness) on each registered builder's program, plus the full-pass
+  cost with the contention/bounds measurements;
+* **gate share of compile time** — a sim-oracle plan compile with the
+  gate on, vs the same compile with verification stubbed out; the gate
+  must stay below 10% of compile wall time (acceptance criterion);
+* **mutant kill rate** — the seeded mutator (drop / swap / corrupt /
+  duplicate) over the full catalogue; must stay >= 0.95;
+
+plus the per-algorithm **bandwidth-efficiency table** the bounds pass
+derives — the static half of the paper's Table I story (the naive
+sequential ring at 1/n is the motivating regime).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/analysis_verify.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # runnable as a plain script without PYTHONPATH
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_repo_root, "src"))
+
+try:
+    from .common import std_fabric, write_json
+except ImportError:   # plain-script mode: benchmarks/ is sys.path[0]
+    from common import std_fabric, write_json
+
+from repro.analysis import GATE_PASSES, kill_rate, verify_program
+from repro.collective import CollectiveOp, compile_op, get_builder, \
+    registered_builders
+from repro.collective.builders import candidates
+from repro.fabric import probe_fabric
+from repro.plan import CollectiveRequest, JobMix, PlanCompiler, SolveBudget
+
+SIZE = 8e6
+
+
+def _catalogue(n: int):
+    """(algo, program) for every registered builder feasible at n."""
+    out = []
+    for algo in sorted(registered_builders()):
+        b = get_builder(algo)
+        for kind in b.kinds:
+            akws = [akw for a, akw in candidates(kind, n) if a == algo]
+            if not akws:
+                continue
+            op = CollectiveOp(kind=kind, size_bytes=SIZE,
+                              group=tuple(range(n)))
+            out.append((algo, compile_op(op, algo, **dict(akws[0]))))
+    return out
+
+
+def _time_verify(programs, passes, reps: int):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for _, prog in programs:
+            verify_program(prog, passes=passes)
+    return (time.perf_counter() - t0) / (reps * len(programs)) * 1e6
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_analysis.json",
+        seed: int = 0):
+    n = 8 if smoke else 16
+    reps = 2 if smoke else 10
+    programs = _catalogue(n)
+    rows = []
+
+    # -- verifier latency --------------------------------------------------
+    gate_us = _time_verify(programs, GATE_PASSES, reps)
+    full_us = _time_verify(programs, None, reps)
+    rows.append({"name": "analysis.verify_gate", "us": gate_us,
+                 "derived": f"n={n} passes={'+'.join(GATE_PASSES)}"})
+    rows.append({"name": "analysis.verify_full", "us": full_us,
+                 "derived": f"n={n} all_passes"})
+
+    # -- gate share of a sim-oracle plan compile ---------------------------
+    fab = std_fabric(n, seed=seed)
+    probe = probe_fabric(fab, seed=seed)
+    # the share is measured against the production SolveBudget — a
+    # smoke-sized budget under-reports the compile and over-reports the
+    # gate (the gate's absolute cost is the same either way)
+    budget = SolveBudget(iters=60, chains=2) if smoke else SolveBudget()
+    mix = JobMix(name="bench", requests=(
+        CollectiveRequest(op="all-reduce", size_bytes=SIZE, count=4),
+        CollectiveRequest(op="all-gather", size_bytes=SIZE / 4, count=2),
+        CollectiveRequest(op="reduce-scatter", size_bytes=SIZE / 4, count=2),
+        CollectiveRequest(op="all-to-all", size_bytes=SIZE / 8, count=1),
+    ))
+
+    t0 = time.perf_counter()
+    compiler = PlanCompiler(fabric=fab, budget=budget, seed=seed)
+    compiler.compile(probe, mix)
+    t_gated = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ungated = PlanCompiler(fabric=fab, budget=budget, seed=seed)
+    ungated._verify_gate = lambda *a, **kw: None   # stub the gate out
+    ungated.compile(probe, mix)
+    t_plain = time.perf_counter() - t0
+
+    gate_share = max(t_gated - t_plain, 0.0) / max(t_gated, 1e-12)
+    rows.append({"name": "analysis.compile_gate_share",
+                 "us": (t_gated - t_plain) * 1e6,
+                 "derived": f"share={gate_share:.4f} gated={t_gated:.3f}s"})
+
+    # -- mutant kill rate over the catalogue -------------------------------
+    t0 = time.perf_counter()
+    rate, survivors = kill_rate([p for _, p in programs], seed=seed)
+    t_kill = time.perf_counter() - t0
+    rows.append({"name": "analysis.mutant_kill_rate", "us": t_kill * 1e6,
+                 "derived": f"rate={rate:.4f} survivors={len(survivors)}"})
+
+    # -- per-algorithm bandwidth efficiency --------------------------------
+    efficiency = {}
+    for algo, prog in programs:
+        rep = verify_program(prog, passes=("bounds",))
+        efficiency[algo] = rep.stats["bounds"]["bandwidth_efficiency"]
+        rows.append({"name": f"analysis.efficiency.{algo}", "us": 0.0,
+                     "derived": f"{efficiency[algo]:.4f}"})
+
+    results = {
+        "n": n,
+        "verify_gate_us_per_program": gate_us,
+        "verify_full_us_per_program": full_us,
+        "compile_gate_share": gate_share,
+        "compile_gated_s": t_gated,
+        "compile_ungated_s": t_plain,
+        "mutant_kill_rate": rate,
+        "mutant_survivors": [list(s) for s in survivors],
+        "bandwidth_efficiency": efficiency,
+        "gate_under_10pct": bool(gate_share < 0.10),
+        "kill_rate_ok": bool(rate >= 0.95),
+    }
+    for r in rows:
+        print(f"{r['name']},{r['us']:.3f},{r['derived']}")
+    write_json(out_path, results, seed)
+    if not results["kill_rate_ok"]:
+        raise RuntimeError(f"mutant kill rate {rate:.4f} below 0.95")
+    if not smoke and not results["gate_under_10pct"]:
+        # smoke mode shrinks the compile, not the gate: the share
+        # criterion only means anything at the production budget
+        raise RuntimeError(
+            f"verify gate is {gate_share * 100:.1f}% of compile time "
+            f"(>= 10%)")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: smaller group, fewer reps")
+    ap.add_argument("--out", default="BENCH_analysis.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

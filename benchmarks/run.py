@@ -12,6 +12,7 @@ import traceback
 
 def main() -> None:
     from . import (
+        analysis_verify,
         collective_ir,
         e2e_training,
         fabric_probe,
@@ -30,7 +31,7 @@ def main() -> None:
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
                 plan_compiler, collective_ir, fabric_probe, faults_churn,
-                obs_trace):
+                obs_trace, analysis_verify):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

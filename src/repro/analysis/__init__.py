@@ -1,0 +1,66 @@
+"""repro.analysis — static verification of collective Programs.
+
+A pass framework over the typed IR (:mod:`repro.collective.ir`) that
+proves schedule properties *without* executing or simulating them:
+
+* :mod:`~repro.analysis.deps` — send/recv dependency graph per round;
+  proves acyclicity (no rendezvous deadlock, no intra-round races, no
+  self-sends) and reports critical-path depth;
+* :mod:`~repro.analysis.liveness` — provenance-carrying abstract chunk
+  interpretation; detects dead transfers, duplicate deliveries, and
+  duplicated rounds by slicing backwards from the postcondition;
+* :mod:`~repro.analysis.bounds` — statically derived cost vs the
+  per-kind bandwidth lower bound (bandwidth-efficiency ratio);
+* :mod:`~repro.analysis.contention` — per-round link-load histograms
+  over a Fabric / HierarchyModel / probe matrices; the congestion
+  report without running the simulator.
+
+:func:`verify_program` drives the registered passes and aggregates a
+:class:`Report`; :func:`require_valid` is the hard-gate form the plan
+compiler and ``Session.lower`` call.  :mod:`~repro.analysis.mutate`
+screens the verifier itself against seeded program mutations, and
+:mod:`~repro.analysis.lint` is the repo's AST-level custom lint gate
+(``repro analyze --lint``).
+
+See DESIGN.md §11 for the pass architecture and the verdict taxonomy.
+"""
+
+from .bounds import analyze_bounds, bandwidth_lower_bound  # noqa: F401
+from .contention import analyze_contention, link_loads  # noqa: F401
+from .deps import analyze_dependencies  # noqa: F401
+from .liveness import analyze_liveness  # noqa: F401
+from .mutate import MUTATIONS, kill_rate, mutants  # noqa: F401
+from .report import (  # noqa: F401
+    SEVERITIES,
+    Finding,
+    Report,
+    VerificationError,
+)
+from .verify import (  # noqa: F401
+    GATE_PASSES,
+    PASSES,
+    PassContext,
+    require_valid,
+    verify_program,
+)
+
+__all__ = [
+    "SEVERITIES",
+    "Finding",
+    "Report",
+    "VerificationError",
+    "PASSES",
+    "GATE_PASSES",
+    "PassContext",
+    "verify_program",
+    "require_valid",
+    "analyze_dependencies",
+    "analyze_liveness",
+    "analyze_bounds",
+    "analyze_contention",
+    "link_loads",
+    "bandwidth_lower_bound",
+    "MUTATIONS",
+    "mutants",
+    "kill_rate",
+]

@@ -1,0 +1,255 @@
+"""AST-level custom lint: repo conventions generic linters can't see.
+
+Four rules, each born from a real convention this codebase adopted and
+then had to re-fix by hand at least once:
+
+* ``raw-perf-counter`` — ``time.perf_counter`` outside ``repro/obs``.
+  PR 7 centralized wall-clock measurement behind ``obs.tracer().timer``
+  so capture/replay can virtualize the clock; a raw perf_counter pair
+  is invisible to trace capture and silently wrong under replay.
+  Scope: ``src/repro`` only (tests and benchmarks may time freely).
+* ``warn-stacklevel`` — every ``warnings.warn`` call must pass
+  ``stacklevel`` so the warning points at the *caller*, not the
+  library line.  Scope: everything scanned.
+* ``toplevel-jax-import`` — the planning layers (core, fabric, plan,
+  session, faults, obs, analysis, the collective IR, the CLI) must be
+  importable without jax; only the jax-native packages (kernels,
+  models, parallel, train, optim, serve, data, checkpoint, launch
+  specs, the collective executors) may import it at module level.
+  Imports guarded by ``try/except ImportError`` or
+  ``if TYPE_CHECKING`` don't count.
+* ``deprecation-warning-category`` — a ``warnings.warn`` whose message
+  mentions deprecation must pass ``DeprecationWarning`` (or
+  ``FutureWarning``), otherwise ``-W error::DeprecationWarning`` CI
+  runs and downstream filters never see it.
+
+Waivers: append ``# lint: allow(<rule-name>)`` to the offending line
+(or the line directly above).  Waivers are for load-bearing exceptions
+— the probe's RTT measurement *is* the clock; the solver's hot-loop
+timeout cannot take a tracer import — and each one should say why in a
+neighboring comment.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["RULES", "LintFinding", "lint_file", "lint_repo",
+           "iter_python_files"]
+
+#: rule name -> one-line description (the registry the CLI prints)
+RULES: Dict[str, str] = {
+    "raw-perf-counter":
+        "time.perf_counter outside repro/obs (use obs.tracer().timer)",
+    "warn-stacklevel":
+        "warnings.warn without stacklevel=",
+    "toplevel-jax-import":
+        "unguarded module-level jax import in a planning layer",
+    "deprecation-warning-category":
+        "deprecation message warned without DeprecationWarning",
+}
+
+#: src/repro-relative prefixes allowed to import jax at module level
+_JAX_NATIVE = (
+    "kernels/", "models/", "parallel/", "train/", "optim/", "serve/",
+    "data/", "checkpoint/",
+    "launch/specs.py", "collective/executors.py",
+)
+
+_WAIVER = "# lint: allow("
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str          # repo-relative
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _waived(lines: Sequence[str], lineno: int, rule: str) -> bool:
+    """True when the line (or the one above) carries an allow waiver."""
+    token = f"{_WAIVER}{rule})"
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and token in lines[ln - 1]:
+            return True
+    return False
+
+
+def _is_jax_import(node: ast.stmt) -> bool:
+    if isinstance(node, ast.Import):
+        return any(a.name == "jax" or a.name.startswith("jax.")
+                   for a in node.names)
+    if isinstance(node, ast.ImportFrom):
+        mod = node.module or ""
+        return node.level == 0 and (mod == "jax" or mod.startswith("jax."))
+    return False
+
+
+def _module_level_jax_imports(tree: ast.Module) -> List[ast.stmt]:
+    """Unguarded module-level jax imports (try/except and TYPE_CHECKING
+    blocks don't count — those are the sanctioned guards)."""
+    out: List[ast.stmt] = []
+    for node in tree.body:
+        if _is_jax_import(node):
+            out.append(node)
+        elif isinstance(node, ast.If):
+            # "if TYPE_CHECKING:" guards typing-only imports
+            t = node.test
+            is_tc = (isinstance(t, ast.Name) and t.id == "TYPE_CHECKING") \
+                or (isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING")
+            if not is_tc:
+                out.extend(s for s in node.body if _is_jax_import(s))
+        # ast.Try at module level is the other guard: don't descend
+    return out
+
+
+def _is_warnings_warn(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "warn" and \
+            isinstance(f.value, ast.Name) and f.value.id == "warnings":
+        return True
+    return isinstance(f, ast.Name) and f.id == "warn"
+
+
+def _string_parts(node: ast.AST) -> Iterable[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub.value
+
+
+def _warn_category(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "category":
+            return kw.value
+    if len(call.args) >= 2:
+        return call.args[1]
+    return None
+
+
+def _category_name(node: Optional[ast.AST]) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _check_warn_calls(tree: ast.Module, rel: str,
+                      lines: Sequence[str]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_warnings_warn(node)):
+            continue
+        if not any(kw.arg == "stacklevel" for kw in node.keywords) and \
+                len(node.args) < 3:
+            if not _waived(lines, node.lineno, "warn-stacklevel"):
+                findings.append(LintFinding(
+                    "warn-stacklevel", rel, node.lineno,
+                    "warnings.warn without stacklevel= — the warning "
+                    "will point at the library, not the caller"))
+        msg_mentions_deprecation = node.args and any(
+            "deprecat" in s.lower() for s in _string_parts(node.args[0]))
+        if msg_mentions_deprecation:
+            cat = _category_name(_warn_category(node))
+            if cat not in ("DeprecationWarning", "FutureWarning",
+                           "PendingDeprecationWarning"):
+                if not _waived(lines, node.lineno,
+                               "deprecation-warning-category"):
+                    findings.append(LintFinding(
+                        "deprecation-warning-category", rel, node.lineno,
+                        f"deprecation message warned with category "
+                        f"{cat or 'UserWarning (default)'} — use "
+                        f"DeprecationWarning so -W filters catch it"))
+    return findings
+
+
+def _check_perf_counter(tree: ast.Module, rel: str,
+                        lines: Sequence[str]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    for node in ast.walk(tree):
+        lineno = None
+        if isinstance(node, ast.Attribute) and node.attr == "perf_counter":
+            lineno = node.lineno
+        elif isinstance(node, ast.ImportFrom) and node.module == "time" and \
+                any(a.name == "perf_counter" for a in node.names):
+            lineno = node.lineno
+        if lineno is not None and \
+                not _waived(lines, lineno, "raw-perf-counter"):
+            findings.append(LintFinding(
+                "raw-perf-counter", rel, lineno,
+                "raw time.perf_counter — use obs.tracer().timer() / "
+                ".span() so capture/replay can virtualize the clock"))
+    return findings
+
+
+def _check_jax_imports(tree: ast.Module, rel: str,
+                       lines: Sequence[str]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    for node in _module_level_jax_imports(tree):
+        if not _waived(lines, node.lineno, "toplevel-jax-import"):
+            findings.append(LintFinding(
+                "toplevel-jax-import", rel, node.lineno,
+                "unguarded module-level jax import in a planning layer "
+                "— import lazily inside the function, or guard with "
+                "try/except ImportError"))
+    return findings
+
+
+def lint_file(path: str, root: str) -> List[LintFinding]:
+    """All rule violations in one file; ``root`` anchors scoping."""
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as fh:
+        src = fh.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintFinding("syntax", rel, e.lineno or 0,
+                            f"file does not parse: {e.msg}")]
+    lines = src.splitlines()
+
+    findings = _check_warn_calls(tree, rel, lines)
+    in_repro = rel.startswith("src/repro/")
+    if in_repro and not rel.startswith("src/repro/obs/"):
+        findings.extend(_check_perf_counter(tree, rel, lines))
+    if in_repro:
+        sub = rel[len("src/repro/"):]
+        if not any(sub.startswith(p) for p in _JAX_NATIVE):
+            findings.extend(_check_jax_imports(tree, rel, lines))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def iter_python_files(root: str,
+                      subdirs: Sequence[str] = ("src", "tests",
+                                                "benchmarks", "examples"),
+                      ) -> List[str]:
+    out: List[str] = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            out.extend(os.path.join(dirpath, f)
+                       for f in filenames if f.endswith(".py"))
+    return sorted(out)
+
+
+def lint_repo(root: str,
+              paths: Optional[Sequence[str]] = None,
+              ) -> Tuple[List[LintFinding], int]:
+    """Lint the repo (or explicit ``paths``); returns (findings, n_files)."""
+    files = list(paths) if paths else iter_python_files(root)
+    findings: List[LintFinding] = []
+    for f in files:
+        findings.extend(lint_file(f, root))
+    return findings, len(files)

@@ -1,0 +1,164 @@
+"""Seeded program mutator: the verifier's own test harness.
+
+Mutation testing for the *verifier*: take a known-good Program, break
+it in one small, realistic way, and check the analysis catches it.  The
+four mutation kinds mirror the bugs schedule generators actually write:
+
+* ``drop_instr``      — delete one flow (a lost relay hop);
+* ``swap_src_dst``    — reverse one flow's direction;
+* ``corrupt_chunk``   — replace one carried chunk id with another;
+* ``duplicate_round`` — execute one round twice in a row.
+
+A mutant counts as *caught* when verification reports any error or
+warning — the ``Report.clean`` gate, strictly stronger than the
+compile gate.  ``kill_rate`` is the acceptance metric: the checked-in
+benchmark requires >= 0.95 over the full builder catalogue.
+
+Mutants are built with ``dataclasses.replace`` on the frozen IR and
+deliberately bypass re-validation (that is the point); determinism
+comes from seeding ``random.Random`` per call, never global state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import zlib
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.collective.ir import FlowInstr, Program
+
+from .verify import verify_program
+
+__all__ = ["MUTATIONS", "mutants", "kill_rate"]
+
+
+def _replace_rounds(program: Program,
+                    rounds: List[List[FlowInstr]]) -> Program:
+    return dataclasses.replace(
+        program, rounds=tuple(tuple(rnd) for rnd in rounds))
+
+
+def _flat_sites(program: Program) -> List[Tuple[int, int]]:
+    """(round index, flow index) of every instruction."""
+    return [(r, i) for r, rnd in enumerate(program.rounds)
+            for i in range(len(rnd))]
+
+
+def _mut_drop_instr(program: Program,
+                    rng: random.Random) -> Optional[Program]:
+    sites = _flat_sites(program)
+    if not sites:
+        return None
+    r, i = rng.choice(sites)
+    rounds = [list(rnd) for rnd in program.rounds]
+    del rounds[r][i]
+    return _replace_rounds(program, rounds)
+
+
+def _mut_swap_src_dst(program: Program,
+                      rng: random.Random) -> Optional[Program]:
+    sites = _flat_sites(program)
+    if not sites:
+        return None
+    r, i = rng.choice(sites)
+    rounds = [list(rnd) for rnd in program.rounds]
+    f = rounds[r][i]
+    rounds[r][i] = dataclasses.replace(f, src=f.dst, dst=f.src)
+    return _replace_rounds(program, rounds)
+
+
+def _mut_corrupt_chunk(program: Program,
+                       rng: random.Random) -> Optional[Program]:
+    sites = [(r, i) for (r, i) in _flat_sites(program)
+             if program.rounds[r][i].chunks]
+    if not sites:
+        return None
+    r, i = rng.choice(sites)
+    rounds = [list(rnd) for rnd in program.rounds]
+    f = rounds[r][i]
+    chunks = list(f.chunks)
+    j = rng.randrange(len(chunks))
+    if program.n_chunks > 1:
+        # swap to a different valid id — the subtle in-range corruption
+        chunks[j] = (chunks[j] + rng.randrange(1, program.n_chunks)) \
+            % program.n_chunks
+    else:
+        chunks[j] = program.n_chunks  # only option: out-of-range id
+    rounds[r][i] = dataclasses.replace(f, chunks=tuple(chunks))
+    return _replace_rounds(program, rounds)
+
+
+def _mut_duplicate_round(program: Program,
+                         rng: random.Random) -> Optional[Program]:
+    nonempty = [r for r, rnd in enumerate(program.rounds) if rnd]
+    if not nonempty:
+        return None
+    r = rng.choice(nonempty)
+    rounds = [list(rnd) for rnd in program.rounds]
+    rounds.insert(r, list(rounds[r]))
+    return _replace_rounds(program, rounds)
+
+
+#: name -> mutator(program, rng) -> mutated Program or None (no site)
+MUTATIONS: Dict[str, Callable[[Program, random.Random],
+                              Optional[Program]]] = {
+    "drop_instr": _mut_drop_instr,
+    "swap_src_dst": _mut_swap_src_dst,
+    "corrupt_chunk": _mut_corrupt_chunk,
+    "duplicate_round": _mut_duplicate_round,
+}
+
+
+def mutants(program: Program, seed: int = 0,
+            per_kind: int = 3,
+            kinds: Optional[Iterable[str]] = None,
+            ) -> List[Tuple[str, Program]]:
+    """Deterministic mutant batch: ``per_kind`` of each mutation kind.
+
+    Mutants identical to the original (or to an earlier mutant of the
+    same kind) are dropped, so short programs yield fewer than
+    ``per_kind``.
+    """
+    out: List[Tuple[str, Program]] = []
+    for kind in (kinds if kinds is not None else MUTATIONS):
+        mutator = MUTATIONS[kind]
+        # PYTHONHASHSEED-independent: fingerprint is hex, kind is CRC'd
+        rng = random.Random(seed * 0x9E3779B1
+                            ^ int(program.fingerprint()[:8], 16)
+                            ^ zlib.crc32(kind.encode()))
+        seen = {program.fingerprint()}
+        for _ in range(per_kind * 4):          # retry budget for dup draws
+            if sum(1 for k, _ in out if k == kind) >= per_kind:
+                break
+            m = mutator(program, rng)
+            if m is None:
+                break
+            fp = m.fingerprint()
+            if fp in seen:
+                continue
+            seen.add(fp)
+            out.append((kind, m))
+    return out
+
+
+def kill_rate(programs: Iterable[Program], seed: int = 0,
+              per_kind: int = 3,
+              ) -> Tuple[float, List[Tuple[str, str, str]]]:
+    """Fraction of mutants caught (error OR warning) over ``programs``.
+
+    Returns ``(rate, survivors)`` with survivors as
+    ``(algorithm, mutation kind, fingerprint)`` triples for diagnosis.
+    """
+    n_total = 0
+    survivors: List[Tuple[str, str, str]] = []
+    for prog in programs:
+        for kind, m in mutants(prog, seed=seed, per_kind=per_kind):
+            n_total += 1
+            report = verify_program(m, passes=("validate", "deps",
+                                               "liveness"))
+            if report.clean:
+                survivors.append((prog.algorithm, kind, m.fingerprint()))
+    if n_total == 0:
+        return 1.0, []
+    return 1.0 - len(survivors) / n_total, survivors

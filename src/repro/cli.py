@@ -719,6 +719,143 @@ def cmd_trace_replay(args: argparse.Namespace) -> int:
 
 
 # ---------------------------------------------------------------------------
+# analyze
+# ---------------------------------------------------------------------------
+
+def _analyze_sweep(n_list, fabric_nodes, seed):
+    """Verify the full builder catalogue; returns (reports, n_bad)."""
+    import random
+
+    from repro.collective import (
+        CollectiveOp, apply_permutation, chunk, compile_op, get_builder,
+        registered_builders)
+    from repro.collective.builders import candidates
+    from repro.analysis import verify_program
+
+    fab = None
+    if fabric_nodes:
+        from repro.fabric import make_datacenter
+        fab = make_datacenter(fabric_nodes, seed=seed)
+    reports = []
+    n_bad = 0
+    for algo in sorted(registered_builders()):
+        b = get_builder(algo)
+        for kind in b.kinds:
+            for n in n_list:
+                # candidates() supplies the feasible kwarg sets (e.g.
+                # every valid bcube base at this n)
+                akws = [akw for a, akw in candidates(kind, n) if a == algo]
+                op = CollectiveOp(kind=kind, size_bytes=1 << 20,
+                                  group=tuple(range(n)))
+                for akw in akws:
+                    base = compile_op(op, algo, **dict(akw))
+                    rng = random.Random(seed + n)
+                    perm = list(range(n))
+                    rng.shuffle(perm)
+                    variants = (("identity", base),
+                                ("permuted", apply_permutation(base, perm)),
+                                ("chunked", chunk(base, 4)))
+                    for label, prog in variants:
+                        use_fab = fab if fab is not None and \
+                            fab.n == prog.n else None
+                        rep = verify_program(prog, fabric=use_fab)
+                        reports.append((label, rep))
+                        if not rep.clean:
+                            n_bad += 1
+    return reports, n_bad
+
+
+def cmd_analyze(args: argparse.Namespace) -> int:
+    """Static analysis: lint the repo, or verify collective Programs."""
+    if args.lint:
+        import os as _os
+
+        from repro.analysis.lint import RULES, lint_repo
+
+        root = args.root or _os.getcwd()
+        findings, n_files = lint_repo(root)
+        for f in findings:
+            print(f)
+        verdict = "clean" if not findings else f"{len(findings)} finding(s)"
+        print(f"[lint] {n_files} files, {len(RULES)} rules: {verdict}")
+        return 1 if findings else 0
+
+    if args.program:
+        from repro.collective import CollectiveOp, compile_op, get_builder
+        from repro.analysis import verify_program
+
+        algo = args.program
+        b = get_builder(algo)
+        n = args.nodes or 16
+        if not b.feasible(n):
+            print(f"[analyze] {algo} is infeasible at n={n}")
+            return 1
+        fab = None
+        if args.fabric_nodes:
+            from repro.fabric import make_datacenter
+            fab = make_datacenter(n, seed=args.seed)
+        bad = 0
+        for kind in b.kinds:
+            op = CollectiveOp(kind=kind, size_bytes=args.payload_bytes
+                              or (1 << 20), group=tuple(range(n)))
+            rep = verify_program(compile_op(op, algo), fabric=fab)
+            print(rep.describe())
+            bad += 0 if rep.ok else 1
+        return 1 if bad else 0
+
+    if args.plan:
+        from repro.session import Session
+        from repro.analysis import verify_program
+
+        cfg = session_config_from_args(args)
+        if _maybe_dump(args, cfg):
+            return 0
+        bad = 0
+        with Session(cfg) as s:
+            plan = s.plan()
+            fab = s._oracle_fabric
+            for (op, bucket, group), e in sorted(plan.entries.items()):
+                prog = e.program()
+                use_fab = fab if fab is not None and fab.n >= max(group) + 1 \
+                    else None
+                rep = verify_program(prog, fabric=use_fab)
+                print(f"  {op:<15} bucket=2^{bucket:<3} "
+                      f"group={len(group):>4} {rep.summary()}")
+                bad += 0 if rep.ok else 1
+        print(f"[analyze] plan: {bad} failing entr{'y' if bad == 1 else 'ies'}"
+              if bad else "[analyze] plan: all entries verified")
+        return 1 if bad else 0
+
+    # default: full-catalogue sweep
+    n_list = [int(x) for x in args.n_list.split(",")]
+    reports, n_bad = _analyze_sweep(n_list, args.fabric_nodes, args.seed)
+    by_algo: Dict[str, int] = {}
+    for label, rep in reports:
+        by_algo[rep.algorithm] = by_algo.get(rep.algorithm, 0)
+        if not rep.clean:
+            by_algo[rep.algorithm] += 1
+            print(rep.describe())
+    for algo in sorted(by_algo):
+        n_variants = sum(1 for _, r in reports if r.algorithm == algo)
+        state = "CLEAN" if not by_algo[algo] else f"{by_algo[algo]} DIRTY"
+        print(f"  {algo:<22} {n_variants:>3} variants  {state}")
+    print(f"[analyze] {len(reports)} programs verified, "
+          f"{n_bad} with errors/warnings")
+    if args.out:
+        payload = {
+            "n_programs": len(reports),
+            "n_bad": n_bad,
+            "n_list": n_list,
+            "reports": [dict(variant=label, **rep.to_dict())
+                        for label, rep in reports],
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[analyze] wrote {args.out}")
+    return 1 if n_bad else 0
+
+
+# ---------------------------------------------------------------------------
 # parser
 # ---------------------------------------------------------------------------
 
@@ -782,6 +919,28 @@ def build_parser() -> argparse.ArgumentParser:
                    help="scenario seed (faults schedule / obs trace)")
     p.add_argument("--out", default=None, help="write bench JSON here")
     p.set_defaults(fn=cmd_bench)
+
+    p = sub.add_parser("analyze",
+                       help="static analysis: verify Programs / lint repo")
+    _add_session_args(p)
+    p.add_argument("--lint", action="store_true",
+                   help="run the repo's AST lint gate instead of the "
+                        "program verifier")
+    p.add_argument("--root", default=None,
+                   help="repo root for --lint (default: cwd)")
+    p.add_argument("--program", default=None, metavar="ALGO",
+                   help="verify one registered builder's program")
+    p.add_argument("--plan", action="store_true",
+                   help="verify every entry of the session's plan")
+    p.add_argument("--n-list", default="4,8,16,64",
+                   help="sweep group sizes (default: 4,8,16,64)")
+    p.add_argument("--fabric-nodes", type=int, default=None,
+                   help="attach a synthetic datacenter fabric of this "
+                        "size for the contention pass")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=None,
+                   help="write the verification report JSON here")
+    p.set_defaults(fn=cmd_analyze)
 
     p = sub.add_parser("status",
                        help="obs metrics snapshot (json or prometheus)")

@@ -69,13 +69,21 @@ def _participants(rnd) -> frozenset:
     return frozenset(e for f in rnd for e in (f.src, f.dst))
 
 
-def fuse_rounds(program: Program) -> Tuple[Program, int]:
+def fuse_rounds(program: Program, verify: bool = True) -> Tuple[Program, int]:
     """Merge adjacent rounds whose participant sets are disjoint.
 
     A rank absent from round i can neither produce data round i+1
     forwards nor observe its barrier, so dropping the barrier between
     two participant-disjoint rounds preserves program semantics (the
     flows now contend for links, which the executors price faithfully).
+    Disjointness is over *ranks*: two instructions that share only a
+    chunk id carry unrelated per-rank state entries and fuse safely
+    (see ``tests/test_analysis.py::test_fuse_rounds_chunk_id_overlap``).
+
+    With ``verify`` (the default) the fused program is re-checked with
+    the static dependency analysis; a fusion that manufactured an
+    intra-round race or missing-data error raises
+    :class:`repro.analysis.VerificationError` instead of shipping.
     Returns ``(program, n_fused)``.
     """
     fused = []
@@ -88,4 +96,9 @@ def fuse_rounds(program: Program) -> Tuple[Program, int]:
             fused.append(tuple(rnd))
     if not n_fused:
         return program, 0
-    return program.replace(rounds=tuple(fused)), n_fused
+    out = program.replace(rounds=tuple(fused))
+    if verify:
+        # lazy: repro.analysis imports this package's IR at module scope
+        from repro.analysis import require_valid
+        require_valid(out, passes=("deps",))
+    return out, n_fused

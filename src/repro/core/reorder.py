@@ -27,11 +27,11 @@ recurse on the next axis.  The result is an integer array of shape
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.fabric.hierarchy import HierarchyModel
 
 from .cost_models import make_cost_model
@@ -152,13 +152,14 @@ def optimize_rank_order_hierarchical(
     then inter-cluster over supernodes) instead of a flat n-sized
     stochastic search.  Falls back to the flat construction heuristic
     on a flat (structureless) hierarchy."""
-    t0 = time.perf_counter()
-    model = make_cost_model(algo, cost_matrix, size_bytes, **kwargs)
-    perm = hierarchical_perm(cost_matrix, hierarchy, seed=seed)
-    cost = float(model.cost(perm))
+    timer = obs.tracer().timer("reorder.hierarchical", algo=algo)
+    with timer:
+        model = make_cost_model(algo, cost_matrix, size_bytes, **kwargs)
+        perm = hierarchical_perm(cost_matrix, hierarchy, seed=seed)
+        cost = float(model.cost(perm))
     return SolveResult(perm=perm, cost=cost,
                        trace=[("hierarchical", 0, cost)],
-                       wall_s=time.perf_counter() - t0)
+                       wall_s=timer.elapsed)
 
 
 # ---------------------------------------------------------------------------

@@ -31,11 +31,12 @@ Usage::
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional
 
 import numpy as np
+
+from repro import obs
 
 
 def _cfg_overrides(cfg, overrides: Dict[str, Any]):
@@ -83,13 +84,15 @@ def run_cell(
     # cache — memory_analysis then reports realistic aliasing.
     donate = (0,) if shape.kind == "train" else (
         (2,) if shape.kind == "decode" else ())
-    t0 = time.perf_counter()
+    lower_t = obs.tracer().timer("dryrun.lower", arch=arch, shape=shape_name)
+    compile_t = obs.tracer().timer("dryrun.compile", arch=arch,
+                                   shape=shape_name)
     with jax.set_mesh(mesh):
-        lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
-        t_lower = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0
+        with lower_t:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
+        with compile_t:
+            compiled = lowered.compile()
+    t_lower, t_compile = lower_t.elapsed, compile_t.elapsed
 
     ma = compiled.memory_analysis()
     mem = {

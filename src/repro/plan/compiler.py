@@ -357,6 +357,30 @@ class PlanCompiler:
         self.fabric = fabric
         self.budget = budget or SolveBudget()
         self.seed = seed
+        # static-verification verdicts per (algo, akw, kind, n): the
+        # schedule structure is size- and placement-invariant, so one
+        # verify covers every bucket/group reusing the same candidate
+        self._verify_cache: Dict[Tuple, bool] = {}
+
+    # -- static verification gate -----------------------------------------
+    def _verify_gate(self, program, *, cache_key: Optional[Tuple] = None,
+                     stage: str) -> None:
+        """Hard gate: raise :class:`repro.analysis.VerificationError` on
+        any error-level finding; warnings surface as obs events."""
+        from repro.analysis import GATE_PASSES, require_valid
+
+        if cache_key is not None and cache_key in self._verify_cache:
+            return
+        report = require_valid(program, passes=GATE_PASSES)
+        m = obs.metrics()
+        m.counter("plan.verify.programs").inc()
+        for f in report.by_severity("warning"):
+            m.counter("plan.verify.warnings").inc()
+            obs.tracer().event("plan.verify.warning", stage=stage,
+                              algo=program.algorithm, code=f.code,
+                              message=f.message)
+        if cache_key is not None:
+            self._verify_cache[cache_key] = True
 
     # -- inputs -----------------------------------------------------------
     @staticmethod
@@ -541,6 +565,13 @@ class PlanCompiler:
             # every candidate's rounds just to discard them dominates
             # large-fleet compiles (bcube at n=1024 is ~1M flows).
             base_prog = compile_op(coll_op, algo, **akw) if use_sim else None
+            if base_prog is not None:
+                # gate every candidate the oracle will score; the verdict
+                # is structural, so it caches across buckets and groups
+                self._verify_gate(
+                    base_prog, stage="candidate",
+                    cache_key=(algo, tuple(sorted(akw.items())),
+                               coll_op.kind, n_g))
             if hier_local is not None:
                 solved_local = hier_local
             else:
@@ -574,6 +605,13 @@ class PlanCompiler:
         winner = chunk_pass(
             apply_permutation(compile_op(coll_op, algo, **akw), node_perm),
             chunks)
+        # the winner ships: verify it even in analytic mode (where no
+        # candidate was gated).  The gate passes analyze rank space and
+        # never read ``perm``, and ``chunk_factor`` only scales stats —
+        # so the structural verdict is shared with the candidate cache
+        self._verify_gate(winner, stage="winner",
+                          cache_key=(algo, tuple(sorted(akw.items())),
+                                     coll_op.kind, n_g))
         return PlanEntry(
             op=op, bucket=bucket, size_bytes=size_bytes, group=group,
             algo=algo, algo_kwargs=dict(akw), chunks=chunks,

@@ -544,6 +544,11 @@ class Session:
                 f"planned ops: {sorted({k[0] for k in self._plan.entries})}")
         ex = JaxExecutor()
         prog = entry.program()
+        # pre-flight: a cached/deserialized plan entry re-materializes
+        # its Program here, after the compiler's gate — re-verify the
+        # exact program we are about to hand to the runtime
+        from repro.analysis import GATE_PASSES, require_valid
+        require_valid(prog, passes=GATE_PASSES)
         if not ex.can_lower(prog):
             raise SessionError(
                 f"entry for {op!r} chose {entry.algo!r}, which has no "

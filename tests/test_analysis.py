@@ -1,0 +1,495 @@
+"""Tests for :mod:`repro.analysis` — static verification + lint (ISSUE-8).
+
+Acceptance criteria exercised here:
+
+* every registered builder verifies **clean** (no errors, no warnings,
+  zero dead transfers) at n in {4, 8, 16, 64}, including after the
+  ``apply_permutation`` and ``chunk`` rewrite passes;
+* the seeded program mutator is caught by the gate passes at >= 95%;
+* the static contention report agrees with the flow-level simulator
+  about the bottleneck on a planted 2-tier fabric: speeding up the
+  reported bottleneck link speeds up the simulated collective, speeding
+  up any other link does not;
+* ``fuse_rounds`` stays safe when instructions share only a chunk id
+  across participant-disjoint rounds (the regression this PR pins);
+* each verdict code is reachable from a hand-built program;
+* the lint rules fire on violations, honor waivers, and the repo
+  itself lints clean.
+"""
+
+import dataclasses
+import random
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    GATE_PASSES,
+    VerificationError,
+    kill_rate,
+    mutants,
+    require_valid,
+    verify_program,
+)
+from repro.analysis.lint import lint_file, lint_repo
+from repro.collective import (
+    CollectiveOp,
+    FlowInstr,
+    Program,
+    apply_permutation,
+    chunk,
+    compile_op,
+    fuse_rounds,
+    get_builder,
+    registered_builders,
+)
+from repro.collective.builders import candidates
+from repro.core.simulator import simulate_rounds
+from repro.fabric import Fabric, HierarchyModel
+
+SIZES = (4, 8, 16, 64)
+
+
+def catalogue(ns=SIZES):
+    """(label, program) for every feasible (builder, kind, n)."""
+    out = []
+    for n in ns:
+        for algo in sorted(registered_builders()):
+            b = get_builder(algo)
+            for kind in b.kinds:
+                akws = [akw for a, akw in candidates(kind, n) if a == algo]
+                if not akws:
+                    continue
+                op = CollectiveOp(kind=kind, size_bytes=1e6,
+                                  group=tuple(range(n)))
+                out.append((f"{algo}/{kind}/n={n}",
+                            compile_op(op, algo, **dict(akws[0]))))
+    return out
+
+
+def hand_program(rounds, *, n=2, n_chunks=1, init="replicated",
+                 post="none", kind="allreduce"):
+    """A minimal hand-built Program for verdict tests."""
+    return Program(
+        op=CollectiveOp(kind=kind, size_bytes=8.0 * n_chunks,
+                        group=tuple(range(n))),
+        algorithm="hand", algo_kwargs=(),
+        rounds=tuple(tuple(r) for r in rounds),
+        perm=tuple(range(n)), n_chunks=n_chunks, chunk_bytes=8.0,
+        init=init, postcondition=post, cost_model="alpha_beta")
+
+
+def codes(report):
+    return {f.code for f in report.findings}
+
+
+# ---------------------------------------------------------------------------
+# catalogue sweep: every builder, every size, every rewrite variant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label,prog", catalogue(), ids=lambda x: x
+                         if isinstance(x, str) else "")
+def test_catalogue_verifies_clean(label, prog):
+    for variant, p in [
+        ("identity", prog),
+        ("permuted", apply_permutation(prog, list(range(prog.n))[::-1])),
+        ("chunked", chunk(prog, 4)),
+    ]:
+        rep = verify_program(p, passes=GATE_PASSES)
+        assert rep.clean, (
+            f"{label} [{variant}]: {[str(f) for f in rep.findings]}")
+        assert rep.stats["liveness"]["n_dead"] == 0, f"{label} [{variant}]"
+        assert rep.stats["deps"]["acyclic"], f"{label} [{variant}]"
+
+
+def test_require_valid_returns_report_on_clean_program():
+    prog = catalogue(ns=(8,))[0][1]
+    rep = require_valid(prog, passes=GATE_PASSES)
+    assert rep.ok and rep.program_fingerprint == prog.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# mutant screen
+# ---------------------------------------------------------------------------
+
+def test_mutant_kill_rate_at_least_95_percent():
+    programs = [p for _, p in catalogue(ns=(4, 8, 16))]
+    rate, survivors = kill_rate(programs, seed=0)
+    assert rate >= 0.95, f"kill rate {rate:.3f}; survivors: {survivors}"
+    # the only tolerated survivors are the naive sequential ring's
+    # src/dst swaps — its second lap re-delivers what the swap broke
+    assert all(algo == "ring_sequential" for algo, _, _ in survivors), \
+        survivors
+
+
+def test_mutants_are_deterministic_and_distinct():
+    prog = catalogue(ns=(8,))[0][1]
+    a = [(kind, m.fingerprint()) for kind, m in mutants(prog, seed=7)]
+    b = [(kind, m.fingerprint()) for kind, m in mutants(prog, seed=7)]
+    assert a == b
+    fps = [fp for _, fp in a]
+    assert len(set(fps)) == len(fps)
+    assert prog.fingerprint() not in fps
+
+
+# ---------------------------------------------------------------------------
+# verdict codes, each reachable from a hand-built program
+# ---------------------------------------------------------------------------
+
+def test_self_send_is_an_error():
+    prog = hand_program([[FlowInstr(0, 0, 8.0, "copy", (0,))]])
+    rep = verify_program(prog, passes=("deps",))
+    assert "SELF_SEND" in codes(rep) and not rep.ok
+
+
+def test_missing_data_is_an_error():
+    # sharded: rank 0 holds only chunk 0, yet sends chunk 1
+    prog = hand_program([[FlowInstr(0, 1, 8.0, "copy", (1,))]],
+                        n_chunks=2, init="sharded")
+    rep = verify_program(prog, passes=("deps",))
+    assert "MISSING_DATA" in codes(rep) and not rep.ok
+
+
+def test_intra_round_race_is_an_error():
+    # rank 1 forwards chunk 0 in the same round it first receives it
+    prog = hand_program(
+        [[FlowInstr(0, 1, 8.0, "copy", (0,)),
+          FlowInstr(1, 2, 8.0, "copy", (0,))]],
+        n=3, n_chunks=3, init="sharded")
+    rep = verify_program(prog, passes=("deps",))
+    assert "INTRA_ROUND_RACE" in codes(rep)
+    assert rep.stats["deps"]["acyclic"] is False
+
+
+def test_deadlock_cycle_detected():
+    # mutual same-round needs: each rank forwards the chunk the other
+    # delivers in this very round — a rendezvous deadlock
+    prog = hand_program(
+        [[FlowInstr(0, 1, 8.0, "copy", (0, 1)),
+          FlowInstr(1, 0, 8.0, "copy", (0, 1))]],
+        n=2, n_chunks=2, init="sharded")
+    rep = verify_program(prog, passes=("deps",))
+    assert "DEADLOCK_CYCLE" in codes(rep) and not rep.ok
+
+
+def test_empty_round_is_a_warning():
+    prog = hand_program([[], [FlowInstr(0, 1, 8.0, "copy", (0,))]])
+    rep = verify_program(prog, passes=("deps",))
+    assert "EMPTY_ROUND" in codes(rep)
+    assert rep.ok and not rep.clean      # warning: gate passes, screen trips
+
+
+def test_duplicate_round_is_a_warning():
+    rnd = [FlowInstr(0, 1, 8.0, "copy", (0,))]
+    prog = hand_program([rnd, rnd])
+    rep = verify_program(prog, passes=("liveness",))
+    assert "DUPLICATE_ROUND" in codes(rep)
+
+
+def test_dead_transfer_is_a_warning():
+    # sharded init already satisfies reduce_scatter, so any transfer is
+    # outside the postcondition's backward slice
+    prog = hand_program([[FlowInstr(0, 1, 8.0, "copy", (0,))]],
+                        init="sharded", post="reduce_scatter",
+                        kind="reduce_scatter")
+    rep = verify_program(prog, passes=("liveness",))
+    assert "DEAD_TRANSFER" in codes(rep)
+    assert rep.stats["liveness"]["n_dead"] == 1
+
+
+def test_validate_pass_reports_invariant_violations_as_findings():
+    # claims allreduce but moves nothing: postcondition fails
+    prog = hand_program([[FlowInstr(0, 1, 8.0, "copy", (0,))]],
+                        post="allreduce")
+    rep = verify_program(prog, passes=("validate",))
+    assert "INVARIANT_VIOLATION" in codes(rep) and not rep.ok
+
+
+# ---------------------------------------------------------------------------
+# bounds
+# ---------------------------------------------------------------------------
+
+def bounds_stats(algo, n, kind="allreduce", **akw):
+    op = CollectiveOp(kind=kind, size_bytes=1e6, group=tuple(range(n)))
+    rep = verify_program(compile_op(op, algo, **akw), passes=("bounds",))
+    return rep.stats["bounds"]
+
+def test_ring_is_bandwidth_optimal():
+    s = bounds_stats("ring", 8)
+    assert s["bandwidth_efficiency"] == pytest.approx(1.0)
+    assert s["bound_kind"] == "allreduce"
+
+
+def test_ring_sequential_efficiency_is_one_over_2n():
+    for n in (8, 16):
+        s = bounds_stats("ring_sequential", n)
+        assert s["bandwidth_efficiency"] == pytest.approx(1.0 / (2 * n))
+        assert s["bound_kind"] == "reduce"     # keyed off the postcondition
+
+
+def test_bcube_bound_keyed_off_postcondition():
+    # bcube registers under allreduce but only builds the RS phase; the
+    # bound must follow the postcondition or efficiency would read 2.0
+    s = bounds_stats("bcube", 16, base=2)
+    assert s["bound_kind"] == "reduce_scatter"
+    assert s["bandwidth_efficiency"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# contention vs the simulator on a planted 2-tier fabric
+# ---------------------------------------------------------------------------
+
+def planted_two_tier(nodes_per_rack=4, n_racks=2,
+                     nic=100e9, uplink=10e9, slow_uplink=5e9):
+    """2 racks, dedicated NICs, rack 0's *up* link planted 2x slower.
+
+    Only the up direction is slow so the bottleneck is a single link —
+    the test needs "fix the reported link, watch the sim speed up".
+    """
+    n = nodes_per_rack * n_racks
+    base = 2 * n
+    link_bw = [nic] * base + [slow_uplink, uplink, uplink, uplink]
+    lat = np.zeros((n, n))
+    bw = np.full((n, n), np.inf)
+    paths = [[() for _ in range(n)] for _ in range(n)]
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            ri, rj = i // nodes_per_rack, j // nodes_per_rack
+            if ri == rj:
+                path = (2 * i, 2 * j + 1)
+            else:
+                path = (2 * i, base + 2 * ri, base + 2 * rj + 1, 2 * j + 1)
+            paths[i][j] = path
+            lat[i, j] = 1e-6 * len(path)
+            bw[i, j] = min(link_bw[l] for l in path)
+    return Fabric(n=n, lat=lat, bw=bw, paths=paths,
+                  link_bw=np.asarray(link_bw, dtype=np.float64),
+                  meta={"kind": "planted"})
+
+
+def with_link_bw(fab, link, factor):
+    link_bw = fab.link_bw.copy()
+    link_bw[link] *= factor
+    return dataclasses.replace(fab, link_bw=link_bw)
+
+
+def test_contention_bottleneck_agrees_with_simulator():
+    fab = planted_two_tier()
+    op = CollectiveOp(kind="allreduce", size_bytes=4e6,
+                      group=tuple(range(fab.n)))
+    prog = compile_op(op, "ring")
+
+    rep = verify_program(prog, passes=("contention",), fabric=fab)
+    stats = rep.stats["contention"]
+    assert stats["mode"] == "fabric"
+    bottleneck = stats["bottleneck_link"]
+    assert bottleneck == 2 * fab.n, \
+        "the planted slow uplink (rack 0, up direction) must be reported"
+    assert stats["static_bound_s"] > 0
+
+    flows = prog.to_flows()
+    t_base = simulate_rounds(fab, flows)
+    # the static bound is a true lower bound on the simulated time
+    assert stats["static_bound_s"] <= t_base * (1 + 1e-9)
+    # speeding up the reported bottleneck speeds up the collective...
+    t_fixed = simulate_rounds(with_link_bw(fab, bottleneck, 2.0), flows)
+    assert t_fixed < t_base * 0.75
+    # ...while speeding up an uncongested NIC changes nothing
+    t_other = simulate_rounds(with_link_bw(fab, 2, 2.0), flows)
+    assert t_other == pytest.approx(t_base, rel=1e-9)
+
+
+def test_contention_flags_oversubscribed_uplink():
+    fab = planted_two_tier()
+    op = CollectiveOp(kind="all_to_all", size_bytes=4e6,
+                      group=tuple(range(fab.n)))
+    algo, akw = candidates("all_to_all", fab.n)[0]
+    rep = verify_program(compile_op(op, algo, **dict(akw)),
+                         passes=("contention",), fabric=fab)
+    over = [f for f in rep.findings if f.code == "OVERSUBSCRIBED_LINK"]
+    assert over, "4 concurrent cross-rack flows share one uplink"
+    assert all(f.severity == "info" for f in over)
+
+
+def test_contention_hierarchy_and_pairwise_modes():
+    fab = planted_two_tier()
+    op = CollectiveOp(kind="allreduce", size_bytes=4e6,
+                      group=tuple(range(fab.n)))
+    prog = compile_op(op, "ring")
+    hier = HierarchyModel(
+        n=fab.n, tiers=(((0, 1, 2, 3), (4, 5, 6, 7)),), heights=(1.0,))
+    rep = verify_program(prog, passes=("contention",), hierarchy=hier)
+    assert rep.stats["contention"]["mode"] == "hierarchy"
+    rep = verify_program(prog, passes=("contention",),
+                         lat=fab.lat, bw=fab.bw)
+    assert rep.stats["contention"]["mode"] == "pairwise"
+    assert rep.stats["contention"]["static_bound_s"] > 0
+    rep = verify_program(prog, passes=("contention",))
+    assert rep.stats["contention"]["mode"] == "none"
+
+
+# ---------------------------------------------------------------------------
+# fuse_rounds: chunk-id overlap across participant-disjoint rounds
+# ---------------------------------------------------------------------------
+
+def test_fuse_rounds_chunk_id_overlap():
+    # both instructions carry chunk id 0, but for different rank pairs:
+    # per-rank state entries are unrelated, so the fusion is safe
+    prog = hand_program(
+        [[FlowInstr(0, 1, 8.0, "copy", (0,))],
+         [FlowInstr(2, 3, 8.0, "copy", (0,))]],
+        n=4)
+    fused, n_fused = fuse_rounds(prog)
+    assert n_fused == 1 and fused.n_rounds == 1
+    assert require_valid(fused, passes=("deps",)).clean
+
+
+def test_fuse_rounds_respects_participant_overlap():
+    prog = hand_program(
+        [[FlowInstr(0, 1, 8.0, "copy", (0,))],
+         [FlowInstr(1, 2, 8.0, "copy", (0,))]],
+        n=3)
+    fused, n_fused = fuse_rounds(prog)
+    assert n_fused == 0 and fused.n_rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# the compiler gate is live
+# ---------------------------------------------------------------------------
+
+def test_plan_compiler_gate_rejects_corrupt_program(monkeypatch):
+    from repro.fabric import probe_fabric
+    import repro.plan.compiler as compiler_mod
+    from repro.plan import (CollectiveRequest, JobMix, PlanCompiler,
+                            SolveBudget)
+
+    real_compile_op = compiler_mod.compile_op
+
+    def corrupt_compile_op(op, algo, **kw):
+        prog = real_compile_op(op, algo, **kw)
+        first = prog.rounds[0][0]
+        bad = dataclasses.replace(first, dst=first.src)   # self-send
+        return prog.replace(
+            rounds=((bad,) + prog.rounds[0][1:],) + prog.rounds[1:])
+
+    monkeypatch.setattr(compiler_mod, "compile_op", corrupt_compile_op)
+    fab = planted_two_tier()
+    compiler = PlanCompiler(fabric=fab,
+                            budget=SolveBudget(iters=30, chains=1), seed=0)
+    mix = JobMix(name="t", requests=(
+        CollectiveRequest(op="all-reduce", size_bytes=1e6, count=1),))
+    with pytest.raises(VerificationError) as ei:
+        compiler.compile(probe_fabric(fab, seed=0), mix)
+    assert any(f.code == "SELF_SEND" for f in ei.value.report.findings)
+
+
+def test_session_lower_gate_is_wired():
+    import inspect
+
+    from repro.session.session import Session
+    src = inspect.getsource(Session.lower)
+    assert "require_valid" in src
+
+
+# ---------------------------------------------------------------------------
+# lint
+# ---------------------------------------------------------------------------
+
+def _lint_src(tmp_path, rel, source):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return lint_file(str(path), str(tmp_path))
+
+
+def test_lint_raw_perf_counter(tmp_path):
+    bad = _lint_src(tmp_path, "src/repro/mod.py", """\
+        import time
+        t0 = time.perf_counter()
+        """)
+    assert [f.rule for f in bad] == ["raw-perf-counter"]
+    waived = _lint_src(tmp_path, "src/repro/mod2.py", """\
+        import time
+        t0 = time.perf_counter()  # lint: allow(raw-perf-counter)
+        """)
+    assert waived == []
+    # repro.obs implements the timers: exempt
+    obs = _lint_src(tmp_path, "src/repro/obs/timers.py", """\
+        import time
+        t0 = time.perf_counter()
+        """)
+    assert obs == []
+
+
+def test_lint_warn_stacklevel(tmp_path):
+    bad = _lint_src(tmp_path, "src/repro/mod.py", """\
+        import warnings
+        warnings.warn("boom")
+        """)
+    assert [f.rule for f in bad] == ["warn-stacklevel"]
+    ok = _lint_src(tmp_path, "src/repro/mod2.py", """\
+        import warnings
+        warnings.warn("boom", stacklevel=2)
+        """)
+    assert ok == []
+
+
+def test_lint_deprecation_category(tmp_path):
+    bad = _lint_src(tmp_path, "src/repro/mod.py", """\
+        import warnings
+        warnings.warn("mod is deprecated; use other", stacklevel=2)
+        """)
+    assert [f.rule for f in bad] == ["deprecation-warning-category"]
+    ok = _lint_src(tmp_path, "src/repro/mod2.py", """\
+        import warnings
+        warnings.warn("mod is deprecated; use other",
+                      DeprecationWarning, stacklevel=2)
+        """)
+    assert ok == []
+
+
+def test_lint_toplevel_jax_import(tmp_path):
+    bad = _lint_src(tmp_path, "src/repro/mod.py", "import jax\n")
+    assert [f.rule for f in bad] == ["toplevel-jax-import"]
+    guarded = _lint_src(tmp_path, "src/repro/mod2.py", """\
+        try:
+            import jax
+        except ImportError:
+            jax = None
+        """)
+    assert guarded == []
+    native = _lint_src(tmp_path, "src/repro/kernels/mod.py", "import jax\n")
+    assert native == []
+
+
+def test_repo_lints_clean():
+    import repro
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(repro.__file__))))
+    findings, n_files = lint_repo(root)
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert n_files > 50
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_analyze_program(capsys):
+    from repro.cli import main
+
+    assert main(["analyze", "--program", "ring", "--nodes", "8"]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_cli_analyze_sweep_small(capsys):
+    from repro.cli import main
+
+    assert main(["analyze", "--n-list", "4", "--fabric-nodes", "4"]) == 0
+    out = capsys.readouterr().out
+    assert "0 with findings" in out or "programs verified" in out
