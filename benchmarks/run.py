@@ -20,6 +20,7 @@ def main() -> None:
         fig1_distribution,
         fig2_heatmap,
         fig4_speedups,
+        lowering_e2e,
         obs_trace,
         plan_compiler,
         roofline,
@@ -31,7 +32,7 @@ def main() -> None:
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
                 plan_compiler, collective_ir, fabric_probe, faults_churn,
-                obs_trace, analysis_verify):
+                obs_trace, analysis_verify, lowering_e2e):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

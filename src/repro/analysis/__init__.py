@@ -9,6 +9,10 @@ proves schedule properties *without* executing or simulating them:
 * :mod:`~repro.analysis.liveness` — provenance-carrying abstract chunk
   interpretation; detects dead transfers, duplicate deliveries, and
   duplicated rounds by slicing backwards from the postcondition;
+* :mod:`~repro.analysis.equiv` — translation validation: symbolically
+  executes the ``LoweredSchedule`` an executor produced and proves
+  chunk-for-chunk bisimulation against the source Program, so every
+  schedule handed to real devices carries a certificate;
 * :mod:`~repro.analysis.bounds` — statically derived cost vs the
   per-kind bandwidth lower bound (bandwidth-efficiency ratio);
 * :mod:`~repro.analysis.contention` — per-round link-load histograms
@@ -28,8 +32,21 @@ See DESIGN.md §11 for the pass architecture and the verdict taxonomy.
 from .bounds import analyze_bounds, bandwidth_lower_bound  # noqa: F401
 from .contention import analyze_contention, link_loads  # noqa: F401
 from .deps import analyze_dependencies  # noqa: F401
+from .equiv import (  # noqa: F401
+    bisimulate,
+    certify_stages,
+    require_certified,
+    symbolic_execute,
+)
 from .liveness import analyze_liveness  # noqa: F401
-from .mutate import MUTATIONS, kill_rate, mutants  # noqa: F401
+from .mutate import (  # noqa: F401
+    LOWERING_MUTATIONS,
+    MUTATIONS,
+    kill_rate,
+    lowering_kill_rate,
+    lowering_mutants,
+    mutants,
+)
 from .report import (  # noqa: F401
     SEVERITIES,
     Finding,
@@ -63,4 +80,11 @@ __all__ = [
     "MUTATIONS",
     "mutants",
     "kill_rate",
+    "LOWERING_MUTATIONS",
+    "lowering_mutants",
+    "lowering_kill_rate",
+    "bisimulate",
+    "symbolic_execute",
+    "certify_stages",
+    "require_certified",
 ]

@@ -1,6 +1,6 @@
 """AST-level custom lint: repo conventions generic linters can't see.
 
-Four rules, each born from a real convention this codebase adopted and
+Six rules, each born from a real convention this codebase adopted and
 then had to re-fix by hand at least once:
 
 * ``raw-perf-counter`` — ``time.perf_counter`` outside ``repro/obs``.
@@ -22,6 +22,19 @@ then had to re-fix by hand at least once:
   mentions deprecation must pass ``DeprecationWarning`` (or
   ``FutureWarning``), otherwise ``-W error::DeprecationWarning`` CI
   runs and downstream filters never see it.
+* ``lowered-construction`` — ``Lowered`` / ``LoweredSchedule`` /
+  ``PermuteStep`` may only be constructed in
+  ``collective/executors.py`` (the one certified lowering path) and
+  ``repro.analysis`` (the translation validator and its mutant
+  screen).  A schedule constructed anywhere else never went through
+  ``equiv`` bisimulation, so a runtime consuming it would execute an
+  unproven schedule.  Scope: ``src/repro`` (tests may build fixtures).
+* ``module-level-np-random`` — legacy global-state ``np.random.*``
+  calls (``seed``, ``rand``, ``normal``...) at module import time make
+  results depend on import order; use a seeded
+  ``np.random.default_rng`` (or ``RandomState``) inside the code that
+  needs it.  Seeded constructors are exempt.  Scope: everything
+  scanned.
 
 Waivers: append ``# lint: allow(<rule-name>)`` to the offending line
 (or the line directly above).  Waivers are for load-bearing exceptions
@@ -50,6 +63,11 @@ RULES: Dict[str, str] = {
         "unguarded module-level jax import in a planning layer",
     "deprecation-warning-category":
         "deprecation message warned without DeprecationWarning",
+    "lowered-construction":
+        "Lowered/LoweredSchedule/PermuteStep built outside the "
+        "certified lowering path (collective/executors.py + analysis)",
+    "module-level-np-random":
+        "legacy np.random.* global-state call at module import time",
 }
 
 #: src/repro-relative prefixes allowed to import jax at module level
@@ -204,6 +222,89 @@ def _check_jax_imports(tree: ast.Module, rel: str,
     return findings
 
 
+#: src/repro-relative prefixes allowed to construct lowering artifacts
+_LOWERING_PATH = ("collective/executors.py", "analysis/")
+
+#: the lowering artifact class names the rule guards
+_LOWERED_NAMES = ("Lowered", "LoweredSchedule", "PermuteStep")
+
+#: np.random attributes that are seeded constructors, not global state
+_NP_RANDOM_SEEDED = ("default_rng", "Generator", "RandomState",
+                     "SeedSequence", "PCG64", "Philox", "MT19937",
+                     "bit_generator")
+
+
+def _check_lowered_construction(tree: ast.Module, rel: str,
+                                lines: Sequence[str]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = f.id if isinstance(f, ast.Name) else (
+            f.attr if isinstance(f, ast.Attribute) else None)
+        if name not in _LOWERED_NAMES:
+            continue
+        if not _waived(lines, node.lineno, "lowered-construction"):
+            findings.append(LintFinding(
+                "lowered-construction", rel, node.lineno,
+                f"{name} constructed outside the certified lowering "
+                f"path — schedules must come from JaxExecutor.lower "
+                f"(collective/executors.py) so equiv bisimulation "
+                f"covers them"))
+    return findings
+
+
+def _module_level_calls(tree: ast.Module) -> List[ast.Call]:
+    """Call nodes executed at import time: module and class bodies,
+    but nothing inside a function/lambda/comprehension-lambda."""
+    out: List[ast.Call] = []
+
+    def visit(stmts) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                visit(stmt.body)
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Lambda):
+                    continue
+                if isinstance(node, ast.Call):
+                    out.append(node)
+
+    visit(tree.body)
+    return out
+
+
+def _check_np_random(tree: ast.Module, rel: str,
+                     lines: Sequence[str]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    # lambdas defer execution: prune calls inside them
+    deferred = {id(c) for stmt in ast.walk(tree)
+                if isinstance(stmt, ast.Lambda)
+                for c in ast.walk(stmt) if isinstance(c, ast.Call)}
+    for node in _module_level_calls(tree):
+        if id(node) in deferred:
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Attribute)
+                and f.value.attr == "random"
+                and isinstance(f.value.value, ast.Name)
+                and f.value.value.id in ("np", "numpy")):
+            continue
+        if f.attr in _NP_RANDOM_SEEDED:
+            continue
+        if not _waived(lines, node.lineno, "module-level-np-random"):
+            findings.append(LintFinding(
+                "module-level-np-random", rel, node.lineno,
+                f"np.random.{f.attr} at module import time mutates "
+                f"global RNG state — use a seeded "
+                f"np.random.default_rng inside the consuming code"))
+    return findings
+
+
 def lint_file(path: str, root: str) -> List[LintFinding]:
     """All rule violations in one file; ``root`` anchors scoping."""
     rel = os.path.relpath(path, root).replace(os.sep, "/")
@@ -224,6 +325,9 @@ def lint_file(path: str, root: str) -> List[LintFinding]:
         sub = rel[len("src/repro/"):]
         if not any(sub.startswith(p) for p in _JAX_NATIVE):
             findings.extend(_check_jax_imports(tree, rel, lines))
+        if not any(sub.startswith(p) for p in _LOWERING_PATH):
+            findings.extend(_check_lowered_construction(tree, rel, lines))
+    findings.extend(_check_np_random(tree, rel, lines))
     return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
 
 

@@ -14,6 +14,13 @@ warning — the ``Report.clean`` gate, strictly stronger than the
 compile gate.  ``kill_rate`` is the acceptance metric: the checked-in
 benchmark requires >= 0.95 over the full builder catalogue.
 
+Since PR 9 the same harness also screens the *translation validator*:
+``LOWERING_MUTATIONS`` break a correct :class:`LoweredSchedule` the
+ways a lowering bug would (drop a permute step, flip a participation
+mask bit, swap a reduce↔copy tag) and
+:func:`lowering_kill_rate` checks :func:`repro.analysis.equiv.bisimulate`
+rejects each one.
+
 Mutants are built with ``dataclasses.replace`` on the frozen IR and
 deliberately bypass re-validation (that is the point); determinism
 comes from seeding ``random.Random`` per call, never global state.
@@ -26,11 +33,19 @@ import random
 import zlib
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
+from repro.collective.executors import LoweredSchedule, PermuteStep
 from repro.collective.ir import FlowInstr, Program
 
 from .verify import verify_program
 
-__all__ = ["MUTATIONS", "mutants", "kill_rate"]
+__all__ = [
+    "MUTATIONS",
+    "mutants",
+    "kill_rate",
+    "LOWERING_MUTATIONS",
+    "lowering_mutants",
+    "lowering_kill_rate",
+]
 
 
 def _replace_rounds(program: Program,
@@ -158,6 +173,145 @@ def kill_rate(programs: Iterable[Program], seed: int = 0,
             report = verify_program(m, passes=("validate", "deps",
                                                "liveness"))
             if report.clean:
+                survivors.append((prog.algorithm, kind, m.fingerprint()))
+    if n_total == 0:
+        return 1.0, []
+    return 1.0 - len(survivors) / n_total, survivors
+
+
+# ---------------------------------------------------------------------------
+# lowering-level mutants: the translation validator's own screen
+# ---------------------------------------------------------------------------
+
+def _replace_step(schedule: LoweredSchedule, r: int, s: int,
+                  step: Optional[PermuteStep]) -> LoweredSchedule:
+    """Schedule with round r's step s replaced (or deleted when None)."""
+    rounds = [list(rnd) for rnd in schedule.rounds]
+    if step is None:
+        del rounds[r][s]
+    else:
+        rounds[r][s] = step
+    return dataclasses.replace(
+        schedule, rounds=tuple(tuple(rnd) for rnd in rounds))
+
+
+def _step_sites(schedule: LoweredSchedule) -> List[Tuple[int, int]]:
+    """(round index, step index) of every PermuteStep."""
+    return [(r, s) for r, rnd in enumerate(schedule.rounds)
+            for s in range(len(rnd))]
+
+
+def _lmut_drop_step(schedule: LoweredSchedule,
+                    rng: random.Random) -> Optional[LoweredSchedule]:
+    """Delete one collective-permute step (a lost shift)."""
+    sites = _step_sites(schedule)
+    if not sites:
+        return None
+    r, s = rng.choice(sites)
+    return _replace_step(schedule, r, s, None)
+
+
+def _lmut_flip_mask(schedule: LoweredSchedule,
+                    rng: random.Random) -> Optional[LoweredSchedule]:
+    """Clear one participation bit an executed link depends on."""
+    sites = []
+    for r, s in _step_sites(schedule):
+        step = schedule.rounds[r][s]
+        for src, dst in step.links:
+            if step.send_mask[src] and step.recv_mask[dst]:
+                sites.append((r, s, "send", src))
+                sites.append((r, s, "recv", dst))
+    if not sites:
+        return None
+    r, s, side, pos = rng.choice(sites)
+    step = schedule.rounds[r][s]
+    if side == "send":
+        mask = list(step.send_mask)
+        mask[pos] = False
+        step = dataclasses.replace(step, send_mask=tuple(mask))
+    else:
+        mask = list(step.recv_mask)
+        mask[pos] = False
+        step = dataclasses.replace(step, recv_mask=tuple(mask))
+    return _replace_step(schedule, r, s, step)
+
+
+def _lmut_swap_tag(schedule: LoweredSchedule,
+                   rng: random.Random) -> Optional[LoweredSchedule]:
+    """Flip one step's reduce↔copy tag (accumulate vs overwrite)."""
+    sites = _step_sites(schedule)
+    if not sites:
+        return None
+    r, s = rng.choice(sites)
+    step = schedule.rounds[r][s]
+    flipped = "copy" if step.op == "reduce" else "reduce"
+    return _replace_step(
+        schedule, r, s, dataclasses.replace(step, op=flipped))
+
+
+#: name -> mutator(schedule, rng) -> mutated schedule or None (no site)
+LOWERING_MUTATIONS: Dict[str, Callable[[LoweredSchedule, random.Random],
+                                       Optional[LoweredSchedule]]] = {
+    "drop_step": _lmut_drop_step,
+    "flip_mask": _lmut_flip_mask,
+    "swap_tag": _lmut_swap_tag,
+}
+
+
+def lowering_mutants(program: Program, seed: int = 0,
+                     per_kind: int = 3,
+                     kinds: Optional[Iterable[str]] = None,
+                     ) -> List[Tuple[str, LoweredSchedule]]:
+    """Deterministic broken-lowering batch for ``program``.
+
+    The program is lowered once with the real
+    :class:`~repro.collective.executors.JaxExecutor` path and each
+    mutant is one small corruption of that correct artifact — exactly
+    the faults a lowering bug would introduce.
+    """
+    from repro.collective.executors import JaxExecutor
+
+    schedule = JaxExecutor().lower_schedule(program)
+    out: List[Tuple[str, LoweredSchedule]] = []
+    for kind in (kinds if kinds is not None else LOWERING_MUTATIONS):
+        mutator = LOWERING_MUTATIONS[kind]
+        rng = random.Random(seed * 0x9E3779B1
+                            ^ int(schedule.fingerprint()[:8], 16)
+                            ^ zlib.crc32(kind.encode()))
+        seen = {schedule.fingerprint()}
+        for _ in range(per_kind * 4):          # retry budget for dup draws
+            if sum(1 for k, _ in out if k == kind) >= per_kind:
+                break
+            m = mutator(schedule, rng)
+            if m is None:
+                break
+            fp = m.fingerprint()
+            if fp in seen:
+                continue
+            seen.add(fp)
+            out.append((kind, m))
+    return out
+
+
+def lowering_kill_rate(programs: Iterable[Program], seed: int = 0,
+                       per_kind: int = 3,
+                       ) -> Tuple[float, List[Tuple[str, str, str]]]:
+    """Fraction of broken lowerings ``equiv.bisimulate`` rejects.
+
+    A mutant is killed only by an *error*-level finding — translation
+    validation is a hard gate, so warnings don't count.  Returns
+    ``(rate, survivors)`` with survivors as ``(algorithm, mutation
+    kind, schedule fingerprint)`` triples.
+    """
+    from .equiv import bisimulate
+
+    n_total = 0
+    survivors: List[Tuple[str, str, str]] = []
+    for prog in programs:
+        for kind, m in lowering_mutants(prog, seed=seed, per_kind=per_kind):
+            n_total += 1
+            findings, _stats = bisimulate(prog, m)
+            if not any(f.severity == "error" for f in findings):
                 survivors.append((prog.algorithm, kind, m.fingerprint()))
     if n_total == 0:
         return 1.0, []

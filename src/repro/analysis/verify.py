@@ -24,6 +24,7 @@ from repro.collective.ir import Program
 from . import bounds as _bounds
 from . import contention as _contention
 from . import deps as _deps
+from . import equiv as _equiv
 from . import liveness as _liveness
 from .report import Finding, Report, VerificationError, finding
 
@@ -64,6 +65,10 @@ def _run_liveness(program, ctx):
     return _liveness.analyze_liveness(program)
 
 
+def _run_equiv(program, ctx):
+    return _equiv.analyze_equiv(program)
+
+
 def _run_bounds(program, ctx):
     return _bounds.analyze_bounds(program)
 
@@ -80,12 +85,16 @@ PASSES: Dict[str, Callable[[Program, PassContext],
     "validate": _run_validate,
     "deps": _run_deps,
     "liveness": _run_liveness,
+    "equiv": _run_equiv,
     "bounds": _run_bounds,
     "contention": _run_contention,
 }
 
-#: passes that prove correctness (the gate set); measurements excluded
-GATE_PASSES = ("validate", "deps", "liveness")
+#: passes that prove correctness (the gate set); measurements excluded.
+#: ``equiv`` makes every compile gate a translation-validation gate:
+#: the program is lowered and the schedule bisimulated as part of
+#: passing verification.
+GATE_PASSES = ("validate", "deps", "liveness", "equiv")
 
 
 def verify_program(

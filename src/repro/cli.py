@@ -765,6 +765,47 @@ def _analyze_sweep(n_list, fabric_nodes, seed):
     return reports, n_bad
 
 
+def _equiv_sweep(n_list, seed):
+    """Differential translation validation over the builder catalogue.
+
+    Every registered builder × kind × n is lowered and bisimulated at
+    each rewrite stage (base → apply_permutation → chunk →
+    fuse_rounds).  Returns (rows, n_bad) where each row is one
+    program's stage-by-stage verdict list.
+    """
+    import random
+
+    from repro.collective import CollectiveOp, compile_op, get_builder, \
+        registered_builders
+    from repro.collective.builders import candidates
+    from repro.analysis import certify_stages
+
+    rows = []
+    n_bad = 0
+    for algo in sorted(registered_builders()):
+        b = get_builder(algo)
+        for kind in b.kinds:
+            for n in n_list:
+                akws = [akw for a, akw in candidates(kind, n) if a == algo]
+                op = CollectiveOp(kind=kind, size_bytes=1 << 20,
+                                  group=tuple(range(n)))
+                for akw in akws:
+                    prog = compile_op(op, algo, **dict(akw))
+                    rng = random.Random(seed + n)
+                    perm = list(range(n))
+                    rng.shuffle(perm)
+                    stages = certify_stages(prog, perm=perm, chunk_k=4)
+                    ok = all(s["ok"] for s in stages)
+                    if not ok:
+                        n_bad += 1
+                    rows.append({
+                        "algorithm": algo, "kind": kind, "n": n,
+                        "algo_kwargs": dict(akw), "ok": ok,
+                        "stages": stages,
+                    })
+    return rows, n_bad
+
+
 def cmd_analyze(args: argparse.Namespace) -> int:
     """Static analysis: lint the repo, or verify collective Programs."""
     if args.lint:
@@ -779,6 +820,39 @@ def cmd_analyze(args: argparse.Namespace) -> int:
         verdict = "clean" if not findings else f"{len(findings)} finding(s)"
         print(f"[lint] {n_files} files, {len(RULES)} rules: {verdict}")
         return 1 if findings else 0
+
+    if args.equiv:
+        n_list = [int(x) for x in args.n_list.split(",")]
+        rows, n_bad = _equiv_sweep(n_list, args.seed)
+        for row in rows:
+            if row["ok"]:
+                continue
+            for st in row["stages"]:
+                if st["ok"]:
+                    continue
+                print(f"  FAIL {row['algorithm']}/{row['kind']} "
+                      f"n={row['n']} stage={st['stage']} "
+                      f"codes={sorted(st['codes'])}")
+        by_algo: Dict[str, int] = {}
+        for row in rows:
+            by_algo.setdefault(row["algorithm"], 0)
+            if not row["ok"]:
+                by_algo[row["algorithm"]] += 1
+        for algo in sorted(by_algo):
+            total = sum(1 for r in rows if r["algorithm"] == algo)
+            state = "CERTIFIED" if not by_algo[algo] \
+                else f"{by_algo[algo]} FAILING"
+            print(f"  {algo:<22} {total:>3} programs  {state}")
+        print(f"[analyze] equiv: {len(rows)} programs x "
+              f"{len(rows[0]['stages']) if rows else 0} stages, "
+              f"{n_bad} failing")
+        if args.out:
+            payload = {"n_programs": len(rows), "n_bad": n_bad,
+                       "n_list": n_list, "rows": rows}
+            with open(args.out, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"[analyze] wrote {args.out}")
+        return 1 if n_bad else 0
 
     if args.program:
         from repro.collective import CollectiveOp, compile_op, get_builder
@@ -932,6 +1006,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="verify one registered builder's program")
     p.add_argument("--plan", action="store_true",
                    help="verify every entry of the session's plan")
+    p.add_argument("--equiv", action="store_true",
+                   help="differential translation validation: lower + "
+                        "bisimulate every builder at each rewrite stage")
     p.add_argument("--n-list", default="4,8,16,64",
                    help="sweep group sizes (default: 4,8,16,64)")
     p.add_argument("--fabric-nodes", type=int, default=None,

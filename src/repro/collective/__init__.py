@@ -35,6 +35,8 @@ from .executors import (  # noqa: F401
     Executor,
     JaxExecutor,
     Lowered,
+    LoweredSchedule,
+    PermuteStep,
     SimExecutor,
 )
 from .ir import (  # noqa: F401
@@ -61,7 +63,9 @@ __all__ = [
     "JaxExecutor",
     "KINDS",
     "Lowered",
+    "LoweredSchedule",
     "POSTCONDITIONS",
+    "PermuteStep",
     "Program",
     "ProgramInvariantError",
     "SimExecutor",

@@ -23,7 +23,9 @@ support, so a caller holding any ``Executor`` can feature-test.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+import hashlib
+import json
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -36,6 +38,8 @@ from .ir import Program
 __all__ = [
     "Executor",
     "Lowered",
+    "PermuteStep",
+    "LoweredSchedule",
     "AnalyticExecutor",
     "SimExecutor",
     "JaxExecutor",
@@ -58,20 +62,132 @@ class Executor(Protocol):
 
 
 @dataclasses.dataclass(frozen=True)
+class PermuteStep:
+    """One ``collective-permute`` call in axis-index (position) space.
+
+    ``links`` is a *partial permutation*: every position appears at most
+    once as a source and at most once as a destination, which is
+    exactly the contract of ``jax.lax.ppermute`` / XLA
+    ``collective-permute``.  ``chunks[k]`` are the logical chunk ids
+    link ``k`` carries; ``op`` tags whether the receiver accumulates
+    (``reduce``) or overwrites (``copy``).  ``send_mask`` /
+    ``recv_mask`` are per-position participation bits — a transfer on
+    link ``(s, d)`` executes only when ``send_mask[s] and
+    recv_mask[d]`` (the translation validator honors exactly this
+    semantics, so a mask bug is an observable lost transfer, not dead
+    metadata).
+    """
+
+    links: Tuple[Tuple[int, int], ...]       # (src_pos, dst_pos) pairs
+    op: str                                  # "reduce" | "copy"
+    chunks: Tuple[Tuple[int, ...], ...]      # per-link chunk ids
+    send_mask: Tuple[bool, ...]              # send_mask[pos]
+    recv_mask: Tuple[bool, ...]              # recv_mask[pos]
+    round_index: int                         # source Program round
+
+    @property
+    def n_transfers(self) -> int:
+        return sum(len(c) for c in self.chunks)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredSchedule:
+    """The generalized lowering: per-round collective-permute steps.
+
+    Any round-based :class:`~repro.collective.ir.Program` lowers to
+    this form: each IR round (a barrier of concurrent flows) becomes a
+    tuple of :class:`PermuteStep`\\ s — a deterministic decomposition of
+    the round's flow multigraph into partial permutations, one per
+    ``(op tag, matching)`` — executed against *round-entry* state (the
+    runtime stages every step's receives and applies them at the round
+    barrier, mirroring the IR's semantics; see
+    ``repro.kernels.schedule_runner``).
+
+    Everything speaks axis-index space: ``order[rank] = position`` is
+    the program's ``local_perm`` (the solved placement), and step links
+    pair positions, directly consumable by ``ppermute`` over the mesh
+    axis.  ``source_fingerprint`` names the exact Program this was
+    lowered from; :func:`repro.analysis.equiv.bisimulate` certifies the
+    pair, and :meth:`fingerprint` identifies the artifact itself.
+
+    Construction is reserved to ``collective/executors.py`` and
+    ``repro.analysis`` (mutation screening) — the custom lint rule
+    ``lowered-construction`` enforces it — so every schedule a runtime
+    sees went through the one certified lowering path.
+    """
+
+    algorithm: str
+    kind: str                                 # CollectiveOp kind
+    n: int
+    order: Tuple[int, ...]                    # order[rank] = position
+    n_chunks: int
+    chunk_bytes: float
+    init: str                                 # one of ir.INITS
+    postcondition: str                        # one of ir.POSTCONDITIONS
+    rounds: Tuple[Tuple[PermuteStep, ...], ...]
+    chunk_factor: int = 1
+    source_fingerprint: str = ""
+
+    @property
+    def rank_of(self) -> Tuple[int, ...]:
+        """Inverse of ``order``: rank_of[position] = logical rank."""
+        inv = [0] * self.n
+        for rank, pos in enumerate(self.order):
+            inv[pos] = rank
+        return tuple(inv)
+
+    @property
+    def n_steps(self) -> int:
+        return sum(len(r) for r in self.rounds)
+
+    @property
+    def n_transfers(self) -> int:
+        return sum(s.n_transfers for r in self.rounds for s in r)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the lowered artifact."""
+        payload = {
+            "algorithm": self.algorithm,
+            "kind": self.kind,
+            "order": list(self.order),
+            "n_chunks": self.n_chunks,
+            "chunk_bytes": float(self.chunk_bytes),
+            "init": self.init,
+            "post": self.postcondition,
+            "chunk_factor": self.chunk_factor,
+            "rounds": [
+                [(list(map(list, s.links)), s.op,
+                  [list(c) for c in s.chunks],
+                  [int(b) for b in s.send_mask],
+                  [int(b) for b in s.recv_mask])
+                 for s in rnd]
+                for rnd in self.rounds
+            ],
+        }
+        blob = json.dumps(payload, separators=(",", ":"), sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
 class Lowered:
     """A jax-lowerable schedule in *axis-index* (local position) space.
 
     ``order[pos] = shard`` is the ring order the program's permutation
     induces over the group; ``links`` are the ppermute neighbor pairs of
     that ring; ``shift_rounds`` are the per-round ``(src, dst)`` pairs
-    (all-to-all programs only; each round is a bijection).
+    (all-to-all programs only; each round is a bijection).  ``schedule``
+    is the generalized per-round :class:`LoweredSchedule` — populated
+    for *every* algorithm, including the ring/a2a special cases whose
+    closed-form ``links``/``shift_rounds`` views are kept for the
+    legacy runtime consumers.
     """
 
-    kind: str                                    # "ring" | "shift_a2a"
+    kind: str                                    # "ring" | "shift_a2a" | "general"
     order: Tuple[int, ...]
     links: Tuple[Tuple[int, int], ...]
     shift_rounds: Tuple[Tuple[Tuple[int, int], ...], ...] = ()
     fingerprint: str = ""
+    schedule: Optional[LoweredSchedule] = None
 
 
 class AnalyticExecutor:
@@ -161,25 +277,109 @@ class SimExecutor:
             "SimExecutor prices programs; use JaxExecutor to lower")
 
 
-#: builder names JaxExecutor can lower, by shape
+#: builder names with a closed-form legacy artifact, by shape.  These
+#: keep their historical ``kind`` (and ``links``/``shift_rounds``
+#: views) because :mod:`repro.parallel.moe_a2a` and
+#: :mod:`repro.serve.engine` consume them; everything else lowers as
+#: ``kind="general"`` through the same :class:`LoweredSchedule` path.
 _RING_ALGOS = ("ring", "ring_sequential", "ring_all_gather")
 _SHIFT_ALGOS = ("all_to_all",)
 
 
+def _decompose_round(
+    flows, lp: Tuple[int, ...], n: int, round_index: int,
+) -> Tuple[PermuteStep, ...]:
+    """Decompose one IR round into position-space partial permutations.
+
+    Greedy and deterministic: flows are visited in program order and
+    packed into the first open step with the same reduce/copy tag whose
+    source and destination positions are both still free (the ppermute
+    contract).  Builders with per-round fan-out > 1 (bcube's b-1 peer
+    exchanges, the double binary tree's two-child reduces) therefore
+    split into several sequential collective-permute calls; single-
+    matching rounds (rings, hypercube exchanges) stay one step.  All
+    steps of a round still read *round-entry* state — the runtime
+    applies receives at the round barrier — so the decomposition never
+    reorders a data dependency.
+    """
+    # each open step: (op, links, chunks, used_src, used_dst)
+    open_steps: List[Tuple[str, List[Tuple[int, int]],
+                           List[Tuple[int, ...]], set, set]] = []
+    for f in flows:
+        s, d = lp[f.src], lp[f.dst]
+        for op, links, chunks, used_s, used_d in open_steps:
+            if op == f.op and s not in used_s and d not in used_d:
+                links.append((s, d))
+                chunks.append(tuple(int(c) for c in f.chunks))
+                used_s.add(s)
+                used_d.add(d)
+                break
+        else:
+            open_steps.append(
+                (f.op, [(s, d)], [tuple(int(c) for c in f.chunks)],
+                 {s}, {d}))
+    steps = []
+    for op, links, chunks, used_s, used_d in open_steps:
+        steps.append(PermuteStep(
+            links=tuple(links), op=op, chunks=tuple(chunks),
+            send_mask=tuple(i in used_s for i in range(n)),
+            recv_mask=tuple(i in used_d for i in range(n)),
+            round_index=round_index))
+    return tuple(steps)
+
+
 class JaxExecutor:
-    """Lowers ring / all-to-all programs to static ppermute schedules.
+    """Lowers round-based programs to static ppermute schedules.
 
     The artifact speaks *axis-index* space: position i within the
     (sorted) group.  ``order`` is the program's local permutation — the
     ring order the solved rank placement induces — and the schedules
     are derived from the program's rounds, so a runtime consuming a
     :class:`Lowered` executes exactly the flows the plan was priced on.
+
+    Every registered algorithm lowers: rings and the shift all-to-all
+    keep their closed-form ``links``/``shift_rounds`` views for the
+    legacy consumers, and *all* programs additionally get the
+    generalized per-round :class:`LoweredSchedule` that
+    :func:`repro.analysis.equiv.bisimulate` certifies against the IR.
     """
 
     name = "jax"
 
     def can_lower(self, program: Program) -> bool:
-        return program.algorithm in _RING_ALGOS + _SHIFT_ALGOS
+        """Total for round-based programs: every flow round decomposes
+        into partial permutations, so any structurally valid Program
+        lowers (certification is equiv's job, not a shape test)."""
+        return bool(program.rounds) or program.n == 1
+
+    def lowerable_algorithms(self) -> Tuple[str, ...]:
+        """Registered builder names this executor can lower (all)."""
+        from .builders import registered_builders
+        return registered_builders()
+
+    def lower_schedule(self, program: Program) -> LoweredSchedule:
+        """Generalized lowering: Program rounds → per-round ppermute
+        steps.  Pure structure translation — no certification; callers
+        that execute the result go through ``Session.lower`` /
+        ``analysis.equiv`` for the bisimulation proof."""
+        lp = tuple(int(i) for i in program.local_perm)
+        n = program.n
+        rounds = tuple(
+            _decompose_round(rnd, lp, n, r_i)
+            for r_i, rnd in enumerate(program.rounds))
+        return LoweredSchedule(
+            algorithm=program.algorithm,
+            kind=program.op.kind,
+            n=n,
+            order=lp,
+            n_chunks=program.n_chunks,
+            chunk_bytes=float(program.chunk_bytes),
+            init=program.init,
+            postcondition=program.postcondition,
+            rounds=rounds,
+            chunk_factor=program.chunk_factor,
+            source_fingerprint=program.fingerprint(),
+        )
 
     def lower(self, program: Program) -> Lowered:
         from repro import obs
@@ -189,10 +389,12 @@ class JaxExecutor:
             lp = tuple(int(i) for i in program.local_perm)
             n = program.n
             links = tuple((lp[i], lp[(i + 1) % n]) for i in range(n))
+            schedule = self.lower_schedule(program)
             if program.algorithm in _RING_ALGOS:
                 obs.metrics().counter("collective.lowered.ring").inc()
                 return Lowered(kind="ring", order=lp, links=links,
-                               fingerprint=program.fingerprint())
+                               fingerprint=program.fingerprint(),
+                               schedule=schedule)
             if program.algorithm in _SHIFT_ALGOS:
                 shift_rounds = tuple(
                     tuple(sorted((lp[f.src], lp[f.dst]) for f in rnd))
@@ -200,10 +402,12 @@ class JaxExecutor:
                 obs.metrics().counter("collective.lowered.shift_a2a").inc()
                 return Lowered(kind="shift_a2a", order=lp, links=links,
                                shift_rounds=shift_rounds,
-                               fingerprint=program.fingerprint())
-        raise NotImplementedError(
-            f"JaxExecutor cannot lower {program.algorithm!r} programs; "
-            f"lowerable algorithms: {_RING_ALGOS + _SHIFT_ALGOS}")
+                               fingerprint=program.fingerprint(),
+                               schedule=schedule)
+            obs.metrics().counter("collective.lowered.general").inc()
+            return Lowered(kind="general", order=lp, links=(),
+                           fingerprint=program.fingerprint(),
+                           schedule=schedule)
 
     def estimate(self, program: Program) -> float:
         raise NotImplementedError(

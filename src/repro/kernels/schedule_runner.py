@@ -1,0 +1,245 @@
+"""Execute a certified :class:`LoweredSchedule` on a jax mesh.
+
+The generalized counterpart of :mod:`repro.kernels.ring_collective`:
+instead of a hand-derived ring, this runner interprets the per-round
+``PermuteStep``\\ s the :class:`~repro.collective.JaxExecutor` lowering
+produced — so *any* registered algorithm (trees, halving-doubling,
+bcube, recursive-doubling...) runs on real devices through
+``jax.lax.ppermute``, with the reduce accumulation fused by the same
+Pallas :func:`~repro.kernels.ring_collective.fused_add` kernel.
+
+Execution semantics mirror the translation validator exactly
+(:mod:`repro.analysis.equiv`):
+
+* the mesh-axis index IS the schedule's position space; device p holds
+  logical rank ``schedule.rank_of[p]``'s buffer;
+* rounds are barriers: every step's payload is gathered from the
+  round-entry buffer, all receives are staged, and applied together at
+  the round boundary;
+* a link ``(s, d)`` fires iff ``send_mask[s] and recv_mask[d]``;
+* ``reduce`` accumulates into the destination chunk row, ``copy``
+  overwrites it;
+* ``chunk_factor`` k pipelines the body serially over k payload
+  slices.
+
+The local buffer is ``[n_chunks + 1, chunk_len]`` per device — row
+``n_chunks`` is a zero scratch row that absorbs the gather/scatter of
+non-participating positions, keeping every step a static dense
+``ppermute`` (no per-device control flow, so the whole schedule jits
+to one XLA program).
+
+This module never certifies anything itself: callers obtain schedules
+through ``Session.lower`` / ``JaxExecutor.lower`` where
+:func:`repro.analysis.equiv.require_certified` has already proven the
+artifact, which is the whole point of translation validation — the
+runner can be this trusting *because* the schedule carries a proof.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.collective.executors import LoweredSchedule
+
+from .ring_collective import fused_add
+
+__all__ = ["run_schedule", "check_postcondition"]
+
+
+def _shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map across jax versions: the top-level ``jax.shard_map``
+    (``check_vma``) when present, else the 0.4.x
+    ``jax.experimental.shard_map`` (``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def _step_tables(step, n: int, n_chunks: int):
+    """Static gather/scatter tables of one PermuteStep.
+
+    Returns ``(eff_links, SEND, RECV)``: the mask-filtered ppermute
+    link list and ``[n, m]`` int32 chunk-row tables (pad entries point
+    at the zero scratch row ``n_chunks``).
+    """
+    m = max((len(c) for c in step.chunks), default=0)
+    m = max(m, 1)
+    send = np.full((n, m), n_chunks, dtype=np.int32)
+    recv = np.full((n, m), n_chunks, dtype=np.int32)
+    eff_links: List[Tuple[int, int]] = []
+    for (s, d), chunks in zip(step.links, step.chunks):
+        if not (step.send_mask[s] and step.recv_mask[d]):
+            continue
+        eff_links.append((int(s), int(d)))
+        send[s, :len(chunks)] = chunks
+        recv[d, :len(chunks)] = chunks
+    return eff_links, send, recv
+
+
+def _initial_buffers(schedule: LoweredSchedule,
+                     x: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Rank-space ``[n, n_chunks + 1, chunk_len]`` buffers from inputs.
+
+    ``x`` is rank-major: row r is logical rank r's contribution, shaped
+    by the schedule's declared init (``replicated``: the full local
+    vector; ``sharded``: rank r's own chunk; ``addressed``: the n
+    outgoing pieces).
+    """
+    n, n_chunks = schedule.n, schedule.n_chunks
+    x = np.asarray(x)
+    assert x.ndim == 2 and x.shape[0] == n, x.shape
+    if schedule.init == "replicated":
+        assert x.shape[1] % n_chunks == 0, (x.shape, n_chunks)
+        chunk_len = x.shape[1] // n_chunks
+        buf = np.zeros((n, n_chunks + 1, chunk_len), dtype=x.dtype)
+        buf[:, :n_chunks] = x.reshape(n, n_chunks, chunk_len)
+    elif schedule.init == "sharded":
+        chunk_len = x.shape[1]
+        buf = np.zeros((n, n_chunks + 1, chunk_len), dtype=x.dtype)
+        for r in range(n):
+            buf[r, r] = x[r]
+    elif schedule.init == "addressed":
+        assert n_chunks == n * n and x.shape[1] % n == 0, (x.shape, n_chunks)
+        chunk_len = x.shape[1] // n
+        buf = np.zeros((n, n_chunks + 1, chunk_len), dtype=x.dtype)
+        for s in range(n):
+            buf[s, s * n:(s + 1) * n] = x[s].reshape(n, chunk_len)
+    else:
+        raise ValueError(f"unknown init {schedule.init!r}")
+    return buf, chunk_len
+
+
+def run_schedule(
+    x,
+    mesh: Mesh,
+    axis: str,
+    schedule: LoweredSchedule,
+    use_pallas_add: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Run ``schedule`` over ``mesh[axis]``; returns final rank buffers.
+
+    ``x``: ``[n, D]`` rank-major inputs (see :func:`_initial_buffers`
+    for D per init).  Returns ``[n, n_chunks, chunk_len]`` rank-major —
+    row r is logical rank r's final chunk buffer, against which the
+    declared postcondition can be checked
+    (:func:`check_postcondition`).
+    """
+    n = schedule.n
+    assert mesh.shape[axis] == n, (mesh.shape, n)
+    buf0, chunk_len = _initial_buffers(schedule, x)
+    k = schedule.chunk_factor
+    if chunk_len % k:
+        raise ValueError(
+            f"chunk_len {chunk_len} not divisible by chunk_factor {k}")
+    piece_len = chunk_len // k
+
+    # device at axis position p plays logical rank rank_of[p]
+    rank_of = np.asarray(schedule.rank_of, dtype=np.int64)
+    buf_pos = buf0[rank_of]                       # position-major
+
+    # static per-step tables, resolved once outside the traced fn
+    tables = [[_step_tables(step, n, schedule.n_chunks) for step in rnd]
+              for rnd in schedule.rounds]
+    cols0 = np.arange(piece_len)
+
+    ops = [[step.op for step in rnd] for rnd in schedule.rounds]
+
+    def per_device(rows):
+        buf = rows[0]                              # [n_chunks+1, chunk_len]
+        me = jax.lax.axis_index(axis)
+        for piece in range(k):
+            cols = jnp.asarray(cols0 + piece * piece_len)
+            for rnd_tables, rnd_ops in zip(tables, ops):
+                entry = buf                        # round-entry snapshot
+                staged = []
+                for eff_links, send, recv in rnd_tables:
+                    if not eff_links:
+                        staged.append(None)
+                        continue
+                    my_send = jnp.asarray(send)[me]          # [m]
+                    payload = entry[my_send[:, None], cols[None, :]]
+                    staged.append(
+                        jax.lax.ppermute(payload, axis, eff_links))
+                for (eff_links, send, recv), op, received in zip(
+                        rnd_tables, rnd_ops, staged):
+                    if received is None:
+                        continue
+                    my_recv = jnp.asarray(recv)[me]          # [m]
+                    rows_idx = my_recv[:, None]
+                    if op == "reduce":
+                        tgt = buf[rows_idx, cols[None, :]]
+                        if use_pallas_add:
+                            new = fused_add(tgt, received,
+                                            interpret=interpret)
+                        else:
+                            new = tgt + received
+                    else:
+                        new = received
+                    buf = buf.at[rows_idx, cols[None, :]].set(new)
+                    # the scratch row absorbed non-receiving positions'
+                    # zero payloads; re-zero it so later gathers stay 0
+                    buf = buf.at[schedule.n_chunks].set(
+                        jnp.zeros_like(buf[schedule.n_chunks]))
+        return buf[None]
+
+    f = _shard_map(per_device, mesh, (P(axis),), P(axis))
+    out_pos = f(jnp.asarray(buf_pos))
+    # back to rank space, scratch row dropped
+    order = np.asarray(schedule.order, dtype=np.int64)
+    return jnp.asarray(out_pos)[order][:, :schedule.n_chunks]
+
+
+def check_postcondition(schedule: LoweredSchedule, x,
+                        out, atol: float = 1e-5) -> List[str]:
+    """Numerically verify ``out`` satisfies the declared postcondition.
+
+    ``x``/``out`` as in :func:`run_schedule`.  Returns human-readable
+    mismatch descriptions (empty list = postcondition holds) — the
+    end-to-end complement of the symbolic bisimulation proof.
+    """
+    n, n_chunks = schedule.n, schedule.n_chunks
+    x = np.asarray(x, dtype=np.float64)
+    out = np.asarray(out, dtype=np.float64)
+    post = schedule.postcondition
+    bad: List[str] = []
+
+    def close(a, b) -> bool:
+        return bool(np.allclose(a, b, atol=atol, rtol=1e-5))
+
+    if post in ("allreduce", "reduce"):
+        want = x.sum(axis=0).reshape(n_chunks, -1)   # replicated init
+        if post == "allreduce":
+            for r in range(n):
+                if not close(out[r], want):
+                    bad.append(f"rank {r}: allreduce result diverges")
+        else:
+            if not any(close(out[r], want) for r in range(n)):
+                bad.append("no rank holds the fully-reduced vector")
+    elif post == "reduce_scatter":
+        want = x.sum(axis=0).reshape(n_chunks, -1)
+        for r in range(n):
+            if not close(out[r, r], want[r]):
+                bad.append(f"rank {r}: chunk {r} not fully reduced")
+    elif post == "all_gather":
+        for r in range(n):
+            for c in range(n_chunks):
+                if not close(out[r, c], x[c]):
+                    bad.append(f"rank {r}: chunk {c} not gathered")
+    elif post == "all_to_all":
+        piece = x.reshape(n, n, -1)                  # [src, dst, len]
+        for s in range(n):
+            for d in range(n):
+                if not close(out[d, s * n + d], piece[s, d]):
+                    bad.append(f"piece {s}→{d} undelivered")
+    elif post != "none":
+        bad.append(f"unknown postcondition {post!r}")
+    return bad

@@ -74,16 +74,29 @@ __all__ = [
 #: so there is no algorithm choice to make.
 PLANNED_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all")
 
-def candidate_algorithms(op: str, n: int) -> List[Tuple[str, Dict[str, int]]]:
+def candidate_algorithms(op: str, n: int,
+                         lowerable_only: bool = False,
+                         ) -> List[Tuple[str, Dict[str, int]]]:
     """Feasible (builder name, builder kwargs) pairs for ``op`` at size n.
 
     Thin alias over :func:`repro.collective.candidates`: power-of-two
     builders are gated on n via each builder's ``feasible`` contract;
     bcube prefers base 4 when n is a power of 4, else base 2.
+
+    With ``lowerable_only`` the list is additionally filtered to
+    algorithms :class:`repro.collective.JaxExecutor` can lower to a
+    real ppermute schedule — consulted from the executor itself, not a
+    hardcoded shape list, so it tracks the generalized lowering (every
+    registered builder today).
     """
     if op not in PLANNED_OPS:
         return []
-    return builder_candidates(op, n)
+    cands = builder_candidates(op, n)
+    if lowerable_only:
+        from repro.collective import JaxExecutor
+        lowerable = set(JaxExecutor().lowerable_algorithms())
+        cands = [(a, kw) for a, kw in cands if a in lowerable]
+    return cands
 
 
 def size_bucket(size_bytes: float) -> int:
@@ -357,19 +370,43 @@ class PlanCompiler:
         self.fabric = fabric
         self.budget = budget or SolveBudget()
         self.seed = seed
-        # static-verification verdicts per (algo, akw, kind, n): the
-        # schedule structure is size- and placement-invariant, so one
-        # verify covers every bucket/group reusing the same candidate
+        # static-verification verdicts, keyed by the program's schedule
+        # *structure* (see _verify_key): size- and placement-invariant,
+        # so one verify covers every bucket/group reusing the same
+        # candidate — but rewrite passes that change the rounds
+        # (chunking, fusion) get their own verdict
         self._verify_cache: Dict[Tuple, bool] = {}
 
     # -- static verification gate -----------------------------------------
-    def _verify_gate(self, program, *, cache_key: Optional[Tuple] = None,
-                     stage: str) -> None:
+    @staticmethod
+    def _verify_key(program) -> Tuple:
+        """Cache key of a program's structural verdict.
+
+        The gate passes analyze rank space and never read ``perm``, so
+        the verdict is placement- and payload-size-invariant — but it
+        is NOT rewrite-invariant: ``chunk`` changes ``chunk_factor``
+        and ``fuse_rounds`` changes the round structure, and replaying
+        an unchunked/unfused verdict for the rewritten program would
+        skip verifying what actually ships (the PR-8 key did exactly
+        that).  The rewrite-pass signature ``(chunk_factor, number of
+        rounds)`` distinguishes every rewrite the compiler applies
+        today; anything more invasive changes the fingerprint-bearing
+        rounds and should not share a verdict anyway.
+        """
+        return (program.algorithm, program.algo_kwargs, program.op.kind,
+                program.n, program.chunk_factor, len(program.rounds))
+
+    def _verify_gate(self, program, *, stage: str, cache: bool = True) -> None:
         """Hard gate: raise :class:`repro.analysis.VerificationError` on
-        any error-level finding; warnings surface as obs events."""
+        any error-level finding; warnings surface as obs events.
+
+        ``GATE_PASSES`` includes the ``equiv`` translation validator,
+        so passing the gate also certifies the program's ppermute
+        lowering against its IR."""
         from repro.analysis import GATE_PASSES, require_valid
 
-        if cache_key is not None and cache_key in self._verify_cache:
+        key = self._verify_key(program)
+        if cache and self._verify_cache.get(key):
             return
         report = require_valid(program, passes=GATE_PASSES)
         m = obs.metrics()
@@ -379,8 +416,8 @@ class PlanCompiler:
             obs.tracer().event("plan.verify.warning", stage=stage,
                               algo=program.algorithm, code=f.code,
                               message=f.message)
-        if cache_key is not None:
-            self._verify_cache[cache_key] = True
+        if cache:
+            self._verify_cache[key] = True
 
     # -- inputs -----------------------------------------------------------
     @staticmethod
@@ -568,10 +605,7 @@ class PlanCompiler:
             if base_prog is not None:
                 # gate every candidate the oracle will score; the verdict
                 # is structural, so it caches across buckets and groups
-                self._verify_gate(
-                    base_prog, stage="candidate",
-                    cache_key=(algo, tuple(sorted(akw.items())),
-                               coll_op.kind, n_g))
+                self._verify_gate(base_prog, stage="candidate")
             if hier_local is not None:
                 solved_local = hier_local
             else:
@@ -606,12 +640,10 @@ class PlanCompiler:
             apply_permutation(compile_op(coll_op, algo, **akw), node_perm),
             chunks)
         # the winner ships: verify it even in analytic mode (where no
-        # candidate was gated).  The gate passes analyze rank space and
-        # never read ``perm``, and ``chunk_factor`` only scales stats —
-        # so the structural verdict is shared with the candidate cache
-        self._verify_gate(winner, stage="winner",
-                          cache_key=(algo, tuple(sorted(akw.items())),
-                                     coll_op.kind, n_g))
+        # candidate was gated).  The winner's key carries its rewrite
+        # signature, so a chunked winner never reuses the unchunked
+        # candidate verdict — it earns (and caches) its own
+        self._verify_gate(winner, stage="winner")
         return PlanEntry(
             op=op, bucket=bucket, size_bytes=size_bytes, group=group,
             algo=algo, algo_kwargs=dict(akw), chunks=chunks,

@@ -526,9 +526,18 @@ class Session:
         Looks up the plan entry for ``op`` at ``size_bytes`` (default:
         the session payload), rebuilds its typed Program, and lowers it
         with :class:`repro.collective.JaxExecutor`.  This is how
-        runtime consumers (``moe_a2a.arm_ep``, the serve engine) pull
-        ppermute ring/shift schedules from the plan instead of
-        re-deriving them from ``(algo, perm)`` string tuples.
+        runtime consumers (``moe_a2a.arm_ep``, the serve engine, the
+        generalized ``schedule_runner``) pull ppermute schedules from
+        the plan instead of re-deriving them from ``(algo, perm)``
+        string tuples.
+
+        Every algorithm lowers (the ring family and all_to_all keep
+        their closed-form views; everything else ships the generalized
+        per-round ``LoweredSchedule``), and no unverified lowering
+        escapes: the program is re-verified through the full gate —
+        which includes the ``equiv`` translation validator — and the
+        *exact artifact returned* is certified chunk-for-chunk against
+        its IR before the runtime sees it.
         """
         from repro.collective import JaxExecutor
 
@@ -546,15 +555,16 @@ class Session:
         prog = entry.program()
         # pre-flight: a cached/deserialized plan entry re-materializes
         # its Program here, after the compiler's gate — re-verify the
-        # exact program we are about to hand to the runtime
-        from repro.analysis import GATE_PASSES, require_valid
+        # exact program we are about to hand to the runtime (GATE_PASSES
+        # includes the equiv bisimulation of the program's own lowering)
+        from repro.analysis import GATE_PASSES, require_certified, require_valid
         require_valid(prog, passes=GATE_PASSES)
-        if not ex.can_lower(prog):
-            raise SessionError(
-                f"entry for {op!r} chose {entry.algo!r}, which has no "
-                f"static ppermute lowering (XLA runs it natively); "
-                f"lowerable choices are the ring family and all_to_all")
-        return ex.lower(prog)
+        lowered = ex.lower(prog)
+        # translation validation on the artifact itself: certify the
+        # schedule object being returned, not just "a" lowering of prog
+        # — defense in depth against a stale or foreign schedule
+        require_certified(prog, lowered.schedule)
+        return lowered
 
     # -- drift: observe / monitor -----------------------------------------
     def observe(self, cost_matrix_now: np.ndarray) -> DriftReport:

@@ -376,12 +376,16 @@ def test_jax_lowering_ring_links():
     assert list(low.links) == _ring_links(perm)
 
 
-def test_jax_executor_refuses_unlowerable_programs():
+def test_jax_executor_lowers_general_programs():
+    # halving_doubling used to be refused (can_lower False); the
+    # generalized lowering now covers every round-based Program.
     ex = JaxExecutor()
     prog = _build("halving_doubling", "allreduce", {}, 8)
-    assert not ex.can_lower(prog)
-    with pytest.raises(NotImplementedError, match="lower"):
-        ex.lower(prog)
+    assert ex.can_lower(prog)
+    low = ex.lower(prog)
+    assert low.kind == "general"
+    assert low.schedule is not None
+    assert low.schedule.n_steps >= len(prog.rounds)
 
 
 # ---------------------------------------------------------------------------
