@@ -22,6 +22,7 @@ def main() -> None:
         fig4_speedups,
         lowering_e2e,
         obs_trace,
+        overlap_step,
         plan_compiler,
         roofline,
         solver_quality,
@@ -32,7 +33,7 @@ def main() -> None:
     for mod in (fig1_distribution, fig2_heatmap, table1_spearman,
                 fig4_speedups, e2e_training, solver_quality, roofline,
                 plan_compiler, collective_ir, fabric_probe, faults_churn,
-                obs_trace, analysis_verify, lowering_e2e):
+                obs_trace, analysis_verify, lowering_e2e, overlap_step):
         try:
             mod.run()
         except Exception as e:  # print and continue; report at exit

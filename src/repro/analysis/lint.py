@@ -1,6 +1,6 @@
 """AST-level custom lint: repo conventions generic linters can't see.
 
-Six rules, each born from a real convention this codebase adopted and
+Seven rules, each born from a real convention this codebase adopted and
 then had to re-fix by hand at least once:
 
 * ``raw-perf-counter`` — ``time.perf_counter`` outside ``repro/obs``.
@@ -29,6 +29,13 @@ then had to re-fix by hand at least once:
   screen).  A schedule constructed anywhere else never went through
   ``equiv`` bisimulation, so a runtime consuming it would execute an
   unproven schedule.  Scope: ``src/repro`` (tests may build fixtures).
+* ``direct-schedule-run`` — the workload layers (``train/``,
+  ``serve/``) must not call ``run_schedule`` directly: the certified
+  schedule reaches a step fused (``repro.kernels.overlap`` /
+  ``OverlapGradReducer``) or via ``Session``, which pin the
+  certification boundary and keep the overlap accounting (bucket
+  records, exposed-comm spans) truthful.  A bare ``run_schedule``
+  call bypasses both.  Scope: ``src/repro/train``, ``src/repro/serve``.
 * ``module-level-np-random`` — legacy global-state ``np.random.*``
   calls (``seed``, ``rand``, ``normal``...) at module import time make
   results depend on import order; use a seeded
@@ -68,6 +75,9 @@ RULES: Dict[str, str] = {
         "certified lowering path (collective/executors.py + analysis)",
     "module-level-np-random":
         "legacy np.random.* global-state call at module import time",
+    "direct-schedule-run":
+        "run_schedule called from train/ or serve/ (go through the "
+        "overlap layer or Session)",
 }
 
 #: src/repro-relative prefixes allowed to import jax at module level
@@ -255,6 +265,32 @@ def _check_lowered_construction(tree: ast.Module, rel: str,
     return findings
 
 
+#: src/repro-relative prefixes barred from calling run_schedule directly
+_WORKLOAD_LAYERS = ("train/", "serve/")
+
+
+def _check_direct_schedule_run(tree: ast.Module, rel: str,
+                               lines: Sequence[str]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = f.id if isinstance(f, ast.Name) else (
+            f.attr if isinstance(f, ast.Attribute) else None)
+        if name != "run_schedule":
+            continue
+        if not _waived(lines, node.lineno, "direct-schedule-run"):
+            findings.append(LintFinding(
+                "direct-schedule-run", rel, node.lineno,
+                "run_schedule called from a workload layer — fuse the "
+                "certified schedule via repro.kernels.overlap "
+                "(run_overlapped / OverlapGradReducer) or go through "
+                "Session, so the certification boundary and overlap "
+                "accounting hold"))
+    return findings
+
+
 def _module_level_calls(tree: ast.Module) -> List[ast.Call]:
     """Call nodes executed at import time: module and class bodies,
     but nothing inside a function/lambda/comprehension-lambda."""
@@ -327,6 +363,8 @@ def lint_file(path: str, root: str) -> List[LintFinding]:
             findings.extend(_check_jax_imports(tree, rel, lines))
         if not any(sub.startswith(p) for p in _LOWERING_PATH):
             findings.extend(_check_lowered_construction(tree, rel, lines))
+        if any(sub.startswith(p) for p in _WORKLOAD_LAYERS):
+            findings.extend(_check_direct_schedule_run(tree, rel, lines))
     findings.extend(_check_np_random(tree, rel, lines))
     return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
 

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -547,6 +548,33 @@ def cmd_bench_obs(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_bench_overlap(args: argparse.Namespace) -> int:
+    """Overlap scenario: planned+bucketed vs planned-sequential step.
+
+    Thin CLI front for :mod:`benchmarks.overlap_step` (modeled-fabric
+    pipeline gate + 8-device host-mesh numeric equivalence); fails
+    (exit 1) when the bucketed step models under the 1.15x floor, the
+    overlapped loss diverges from the baseline, or the certified
+    schedule's postcondition breaks."""
+    import importlib
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    sys.path.insert(0, repo)
+    try:
+        mod = importlib.import_module("benchmarks.overlap_step")
+    except ImportError as e:
+        print(f"[bench] benchmarks/ not importable from {repo}: {e}")
+        return 1
+    try:
+        mod.run(smoke=bool(args.smoke),
+                out_path=args.out or "BENCH_overlap.json", seed=args.seed)
+    except RuntimeError as e:
+        print(f"[bench] FAIL: {e}")
+        return 1
+    return 0
+
+
 def cmd_bench(args: argparse.Namespace) -> int:
     """Self-contained plan-pipeline benchmark (CI smoke + local sanity).
 
@@ -556,7 +584,9 @@ def cmd_bench(args: argparse.Namespace) -> int:
 
     ``--scenario faults`` switches to the churn/recovery scenario
     (:func:`cmd_bench_faults`); ``--scenario obs`` to the observability
-    overhead + capture→replay scenario (:func:`cmd_bench_obs`).
+    overhead + capture→replay scenario (:func:`cmd_bench_obs`);
+    ``--scenario overlap`` to the overlapped-train-step gate
+    (:func:`cmd_bench_overlap`).
     """
     from repro.session import Session
 
@@ -564,6 +594,8 @@ def cmd_bench(args: argparse.Namespace) -> int:
         return cmd_bench_faults(args)
     if getattr(args, "scenario", "plan") == "obs":
         return cmd_bench_obs(args)
+    if getattr(args, "scenario", "plan") == "overlap":
+        return cmd_bench_overlap(args)
     sizes = [16] if args.smoke else [32, 64]
     iters = 200 if args.smoke else 800
     results: List[Dict[str, Any]] = []
@@ -985,10 +1017,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--smoke", action="store_true",
                    help="one small fabric (CI)")
     p.add_argument("--scenario", default="plan",
-                   choices=["plan", "faults", "obs"],
+                   choices=["plan", "faults", "obs", "overlap"],
                    help="plan: compile/cache pipeline; faults: seeded "
                         "churn with ladder recovery; obs: tracing "
-                        "overhead + capture/replay")
+                        "overhead + capture/replay; overlap: bucketed "
+                        "overlapped train step vs sequential")
     p.add_argument("--seed", type=int, default=0,
                    help="scenario seed (faults schedule / obs trace)")
     p.add_argument("--out", default=None, help="write bench JSON here")

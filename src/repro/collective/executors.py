@@ -144,6 +144,36 @@ class LoweredSchedule:
     def n_transfers(self) -> int:
         return sum(s.n_transfers for r in self.rounds for s in r)
 
+    def slice_rounds(self, start: int = 0,
+                     stop: Optional[int] = None) -> "LoweredSchedule":
+        """Sub-schedule holding ``rounds[start:stop]``.
+
+        The per-round execution window the overlap layer
+        (:mod:`repro.kernels.overlap`) interleaves compute into.  Steps
+        keep their original ``round_index`` for traceability, and
+        ``source_fingerprint`` still names the full program.  A partial
+        window carries ``postcondition="none"`` — only the complete
+        round sequence satisfies the declared contract — and a window
+        with ``start > 0`` is only meaningful against explicitly seeded
+        mid-stream buffers (``init`` is kept for shape metadata only).
+        Slicing never edits a round: the full-range slice is the
+        schedule itself, so certification transfers.
+        """
+        stop = len(self.rounds) if stop is None else stop
+        if not (0 <= start <= stop <= len(self.rounds)):
+            raise ValueError(
+                f"round window [{start}, {stop}) out of range for "
+                f"{len(self.rounds)} rounds")
+        if start == 0 and stop == len(self.rounds):
+            return self
+        return dataclasses.replace(self, rounds=self.rounds[start:stop],
+                                   postcondition="none")
+
+    def split_rounds(self) -> Tuple["LoweredSchedule", ...]:
+        """One single-round sub-schedule per round, in order."""
+        return tuple(self.slice_rounds(i, i + 1)
+                     for i in range(len(self.rounds)))
+
     def fingerprint(self) -> str:
         """Stable content hash of the lowered artifact."""
         payload = {

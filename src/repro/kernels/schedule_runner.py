@@ -37,6 +37,7 @@ runner can be this trusting *because* the schedule carries a proof.
 
 from __future__ import annotations
 
+import functools
 from typing import List, Tuple
 
 import jax
@@ -48,7 +49,7 @@ from repro.collective.executors import LoweredSchedule
 
 from .ring_collective import fused_add
 
-__all__ = ["run_schedule", "check_postcondition"]
+__all__ = ["run_schedule", "check_postcondition", "schedule_tables"]
 
 
 def _shard_map(f, mesh: Mesh, in_specs, out_specs):
@@ -82,6 +83,27 @@ def _step_tables(step, n: int, n_chunks: int):
         send[s, :len(chunks)] = chunks
         recv[d, :len(chunks)] = chunks
     return eff_links, send, recv
+
+
+@functools.lru_cache(maxsize=256)
+def schedule_tables(schedule: LoweredSchedule):
+    """Static per-round ``(eff_links, SEND, RECV)`` tables + op tags.
+
+    Schedules are hot-path constants: a train step re-runs the same
+    certified artifact every call, so the tables are memoised on the
+    schedule *value* (frozen dataclasses hash by content — two lowerings
+    of the same program share one entry).  Returns
+    ``(tables, ops)`` where ``tables[r][s]`` is :func:`_step_tables` of
+    round ``r``'s step ``s`` and ``ops[r][s]`` its reduce/copy tag.
+    The cached arrays are read-only by convention — every consumer
+    gathers from them without mutation.
+    """
+    tables = tuple(
+        tuple(_step_tables(step, schedule.n, schedule.n_chunks)
+              for step in rnd)
+        for rnd in schedule.rounds)
+    ops = tuple(tuple(step.op for step in rnd) for rnd in schedule.rounds)
+    return tables, ops
 
 
 def _initial_buffers(schedule: LoweredSchedule,
@@ -146,12 +168,10 @@ def run_schedule(
     rank_of = np.asarray(schedule.rank_of, dtype=np.int64)
     buf_pos = buf0[rank_of]                       # position-major
 
-    # static per-step tables, resolved once outside the traced fn
-    tables = [[_step_tables(step, n, schedule.n_chunks) for step in rnd]
-              for rnd in schedule.rounds]
+    # static per-step tables, resolved once per schedule (memoised —
+    # repeated calls on the same certified artifact skip the rebuild)
+    tables, ops = schedule_tables(schedule)
     cols0 = np.arange(piece_len)
-
-    ops = [[step.op for step in rnd] for rnd in schedule.rounds]
 
     def per_device(rows):
         buf = rows[0]                              # [n_chunks+1, chunk_len]

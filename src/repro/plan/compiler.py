@@ -185,6 +185,11 @@ class PlanEntry:
     solver_cost: float                # cost-model objective of perm
     oracle: str                       # "simulator" | "cost_model"
     program_fingerprint: str = ""     # Program.fingerprint() of the choice
+    #: planned overlap-bucket payload (bytes) for this octave: the size
+    #: the gradient-bucketing layer (``repro.train.overlap_grads``)
+    #: should split a payload of this entry's octave into when fusing
+    #: the collective with compute.  0.0 = not planned for this op.
+    bucket_bytes: float = 0.0
 
     @property
     def local_perm(self) -> np.ndarray:
@@ -232,6 +237,7 @@ class PlanEntry:
             solver_cost=float(d["solver_cost"]),
             oracle=d["oracle"],
             program_fingerprint=d.get("program_fingerprint", ""),
+            bucket_bytes=float(d.get("bucket_bytes", 0.0)),
         )
 
 
@@ -353,6 +359,10 @@ class SolveBudget:
     #: :class:`repro.fabric.HierarchyModel` is available — the flat SA
     #: search is the compile bottleneck at fleet scale
     hierarchy_min_n: int = 48
+    #: candidate overlap-bucket payloads (bytes) scored per all-reduce
+    #: entry; the octave's own size always joins as the single-bucket
+    #: candidate
+    bucket_candidates: Tuple[int, ...] = (1 << 18, 1 << 20, 1 << 22)
 
 
 class PlanCompiler:
@@ -644,6 +654,9 @@ class PlanCompiler:
         # signature, so a chunked winner never reuses the unchunked
         # candidate verdict — it earns (and caches) its own
         self._verify_gate(winner, stage="winner")
+        pos = {int(node): i for i, node in enumerate(g)}
+        winner_local = np.asarray([pos[int(x)] for x in node_perm],
+                                  dtype=np.int64)
         return PlanEntry(
             op=op, bucket=bucket, size_bytes=size_bytes, group=group,
             algo=algo, algo_kwargs=dict(akw), chunks=chunks,
@@ -651,4 +664,46 @@ class PlanCompiler:
             expected_time=float(t), identity_times=identity_times,
             solver_cost=mcost, oracle=oracle_name,
             program_fingerprint=winner.fingerprint(),
+            bucket_bytes=self._select_bucket_bytes(
+                op, algo, akw, sub_lat, sub_bw, winner_local, size_bytes),
         )
+
+    def _select_bucket_bytes(self, op: str, algo: str, akw: Dict[str, int],
+                             sub_lat, sub_bw, local: np.ndarray,
+                             size_bytes: float) -> float:
+        """Overlap-bucket payload for this octave (all-reduce only).
+
+        Scores each candidate bucket size ``b`` by the pipeline-makespan
+        lower bound of running ``ceil(S / b)`` back-to-back schedules
+        fused with compute: the first bucket's transfer is fully exposed
+        (pipeline fill) and every later bucket still exposes its latency
+        floor — the per-round issue cost that serializes with the
+        applies even when bandwidth hides behind compute::
+
+            score(b) = t(b) + (ceil(S / b) - 1) * t_latency_only
+
+        Small buckets shrink the exposed fill but multiply the latency
+        floor; large buckets amortize latency but leave a long fill.
+        The winner's *analytic* model prices both terms — bucketing is a
+        pipelining tradeoff, where the affine alpha-beta form suffices
+        even when the entry itself was scored on the simulator (pricing
+        ~4 extra programs per entry on the simulator would dominate
+        compile time at fleet scale for no ranking change).
+        """
+        if op != "all-reduce" or size_bytes <= 0:
+            return 0.0
+        t_lat = float(self._model(algo, sub_lat, sub_bw, 0.0, akw)
+                      .cost(local))
+        cands = sorted(
+            {float(b) for b in self.budget.bucket_candidates
+             if 0 < b < size_bytes} | {float(size_bytes)},
+            reverse=True)     # ties go to the larger bucket
+        best_b, best_score = cands[0], None
+        for b in cands:
+            n_buckets = int(np.ceil(size_bytes / b))
+            t_b = float(self._model(algo, sub_lat, sub_bw, b, akw)
+                        .cost(local))
+            score = t_b + (n_buckets - 1) * t_lat
+            if best_score is None or score < best_score:
+                best_b, best_score = b, score
+        return best_b

@@ -53,6 +53,10 @@ class GenerationEngine:
         self.cfg = gen_cfg or GenerationConfig()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+        #: armed by arm_overlap(): the planned, certified all-gather
+        #: schedule fused with decode/prefill compute
+        self._overlap: Optional[Dict[str, Any]] = None
+        self._overlap_decode: Optional[Callable] = None
         self.stats: Dict[str, float] = {"prefill_tokens": 0, "decode_steps": 0}
         #: a repro.session.Session may own the plan lifecycle for the
         #: engine: its (lazily compiled) plan is adopted when no explicit
@@ -118,6 +122,84 @@ class GenerationEngine:
         prog = entry.program()
         return ex.lower(prog) if ex.can_lower(prog) else None
 
+    def arm_overlap(self, mesh, axis: str, payload_bytes: float = 1e6,
+                    interpret: bool = True):
+        """Fuse the planned all-gather into decode/prefill compute.
+
+        Looks up the plan's all-gather entry at ``payload_bytes``,
+        lowers it, **certifies the exact schedule artifact**
+        (:func:`repro.analysis.require_certified` — unlike
+        :meth:`lowered_collective`, nothing uncertified escapes here),
+        and rearms the wave loop: each decode step then issues the
+        schedule's rounds via :func:`repro.kernels.overlap.run_overlapped`
+        with the *next* token's decode as resident compute, and prefill
+        overlaps the prompt-activation gather with cache growth.  The
+        gathered payload is the step's activation block, so the
+        schedule's allgather postcondition is checkable against it
+        (``generate`` checks the first step of every wave).
+
+        Returns the certified :class:`LoweredSchedule`.
+        """
+        from repro.analysis import require_certified
+        from repro.collective import JaxExecutor
+
+        if self.session is not None and self.session.planned is not None:
+            self.plan = self.session.planned
+        if self.plan is None:
+            raise ValueError("arm_overlap() needs a plan (or session)")
+        entry = self.plan.lookup("all-gather", payload_bytes)
+        if entry is None:
+            raise ValueError(
+                f"plan has no all-gather entry near {payload_bytes:.0f} B")
+        prog = entry.program()
+        sched = JaxExecutor().lower_schedule(prog)
+        require_certified(prog, sched)
+        if mesh.shape[axis] != sched.n:
+            raise ValueError(f"mesh axis {axis!r} has {mesh.shape[axis]} "
+                             f"devices, schedule wants {sched.n}")
+        self._overlap = {"mesh": mesh, "axis": axis, "schedule": sched,
+                         "interpret": interpret}
+
+        def step(params, cur, cache, payload):
+            from repro.kernels.overlap import run_overlapped
+
+            gathered, (dec,) = run_overlapped(
+                payload, mesh, axis, sched,
+                compute=[lambda: self.model.decode_step(params, cur, cache)],
+                use_pallas_add=False, interpret=interpret)
+            logits, new_cache = dec
+            return logits, new_cache, gathered
+
+        self._overlap_decode = jax.jit(step)
+        self.stats["overlap_algo"] = sched.algorithm
+        return sched
+
+    def _ag_payload(self, logits: jnp.ndarray) -> jnp.ndarray:
+        """Rank-major ``[n, D]`` all-gather input from an activation block.
+
+        The step's logits block stands in for the TP activations the
+        gather moves on a real mesh; padded so every rank's shard is a
+        whole number of schedule pieces.
+        """
+        sched = self._overlap["schedule"]
+        n, k = sched.n, max(1, sched.chunk_factor)
+        flat = logits.reshape(-1)
+        per = -(-flat.size // n)
+        per = -(-per // k) * k
+        return jnp.pad(flat, (0, n * per - flat.size)).reshape(n, per)
+
+    def _check_gather(self, payload, gathered) -> None:
+        """End-to-end postcondition of the wave's first overlapped gather."""
+        from repro.kernels.schedule_runner import check_postcondition
+
+        bad = check_postcondition(self._overlap["schedule"],
+                                  np.asarray(payload), np.asarray(gathered))
+        if bad:
+            raise RuntimeError(
+                "overlapped all-gather violated its postcondition: "
+                + "; ".join(bad[:3]))
+        obs.metrics().counter("serve.overlap.postcondition_ok").inc()
+
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -141,8 +223,22 @@ class GenerationEngine:
         with obs.tracer().span("serve.prefill", batch=B, prompt_len=P):
             logits, cache = self._prefill(self.params, tokens, frontend_embeds)
         self.stats["prefill_tokens"] += B * P
-        # grow the cache to P + max_new slots
-        cache = _grow_cache(cache, P, P + max_new)
+        # grow the cache to P + max_new slots; when armed, the planned
+        # all-gather of the prompt activations rides along, with the
+        # cache growth as its resident compute
+        if self._overlap is not None:
+            ov = self._overlap
+            from repro.kernels.overlap import run_overlapped
+
+            payload = self._ag_payload(logits)
+            with obs.tracer().span("serve.overlap.prefill",
+                                   bytes=float(payload.nbytes)):
+                _, (cache,) = run_overlapped(
+                    payload, ov["mesh"], ov["axis"], ov["schedule"],
+                    compute=[lambda: _grow_cache(cache, P, P + max_new)],
+                    use_pallas_add=False, interpret=ov["interpret"])
+        else:
+            cache = _grow_cache(cache, P, P + max_new)
 
         # TP decode issues an all-gather + reduce-scatter of the step's
         # activations per layer; the per-step logits block is the
@@ -162,7 +258,16 @@ class GenerationEngine:
                 if finished.all():
                     break
                 rng, sub = jax.random.split(rng)
-                logits, cache = self._decode(self.params, cur, cache)
+                if self._overlap is not None:
+                    # step t's planned all-gather (of step t's activation
+                    # block) is on the wire while step t+1's decode runs
+                    payload = self._ag_payload(logits)
+                    logits, cache, gathered = self._overlap_decode(
+                        self.params, cur, cache, payload)
+                    if t == 0:
+                        self._check_gather(payload, gathered)
+                else:
+                    logits, cache = self._decode(self.params, cur, cache)
                 self.stats["decode_steps"] += 1
                 rec.record("all-gather", act_bytes)
                 rec.record("reduce-scatter", act_bytes)

@@ -16,7 +16,10 @@ Every knob that was previously hand-threaded through ``core`` / ``plan``
 * :class:`MeshConfig` — N-D mesh shape + axis names;
 * :class:`ObsConfig` — observability: tracing on/off + ring-buffer
   size, workload capture, metrics, and export paths (see
-  :mod:`repro.obs`).
+  :mod:`repro.obs`);
+* :class:`OverlapConfig` — compute–communication overlap mode and
+  bucket-size override for the certified train/serve step (see
+  :mod:`repro.train.overlap_grads`).
 
 The tree round-trips through plain dicts (:meth:`SessionConfig.to_dict`
 / :meth:`SessionConfig.from_dict`), JSON files (:meth:`SessionConfig.load`
@@ -45,6 +48,7 @@ __all__ = [
     "DriftConfig",
     "MeshConfig",
     "ObsConfig",
+    "OverlapConfig",
     "RetryPolicy",
     "SessionConfig",
 ]
@@ -182,6 +186,33 @@ class ObsConfig:
     capture_path: Optional[str] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class OverlapConfig:
+    """Compute–communication overlap of the certified collective path.
+
+    Consumed by ``Session.overlap_step`` and the train layer
+    (:mod:`repro.train.overlap_grads`): ``mode`` selects how the
+    bucketed gradient all-reduce interleaves with compute, and
+    ``bucket_bytes`` overrides the plan-selected bucket payload
+    (``0`` = use :attr:`repro.plan.PlanEntry.bucket_bytes`).  Env
+    overlay: ``REPRO_OVERLAP_MODE=bucketed`` etc.
+    """
+
+    mode: str = "off"            # "off" | "sequential" | "bucketed" | "fused"
+    #: bucket payload override (bytes); 0 = planned per octave
+    bucket_bytes: float = 0.0
+    #: mesh axis the bucketed all-reduce runs over
+    axis: str = "data"
+    #: accumulate reduces through the Pallas fused_add kernel
+    use_pallas_add: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("off", "sequential", "bucketed", "fused"):
+            raise ValueError(
+                f"OverlapConfig.mode must be 'off', 'sequential', "
+                f"'bucketed', or 'fused'; got {self.mode!r}")
+
+
 _SECTIONS: Dict[str, type] = {
     "fabric": FabricConfig,
     "probe": ProbeConfig,
@@ -191,6 +222,7 @@ _SECTIONS: Dict[str, type] = {
     "retry": RetryPolicy,
     "mesh": MeshConfig,
     "obs": ObsConfig,
+    "overlap": OverlapConfig,
 }
 
 
@@ -239,7 +271,8 @@ def _dataclass_from_dict(cls: type, d: Mapping[str, Any], path: str) -> Any:
                 _dataclass_from_dict(SolveBudget, dict(value), f"{path}.{name}")
             continue
         kwargs[name] = _coerce(_field_hint(f), value)
-        if name == "chunk_candidates" and kwargs[name] is not None:
+        if name in ("chunk_candidates", "bucket_candidates") \
+                and kwargs[name] is not None:
             kwargs[name] = _parse_dims(kwargs[name])
     return cls(**kwargs)
 
@@ -261,6 +294,7 @@ class SessionConfig:
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
     obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    overlap: OverlapConfig = dataclasses.field(default_factory=OverlapConfig)
     #: dominant collective payload of the workload (bytes)
     payload_bytes: float = 4e6
     #: workload shape for the default job mix ("train" | "serve")

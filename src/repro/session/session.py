@@ -566,6 +566,60 @@ class Session:
         require_certified(prog, lowered.schedule)
         return lowered
 
+    def overlap_step(self, mesh: Any, axis: Optional[str] = None, *,
+                     total_bytes: Optional[float] = None,
+                     mode: Optional[str] = None,
+                     bucket_bytes: Optional[float] = None,
+                     interpret: bool = True):
+        """A certified overlap reducer for the train step's grad all-reduce.
+
+        Returns an :class:`~repro.train.overlap_grads.OverlapGradReducer`
+        bound to ``mesh`` and the plan's certified all-reduce schedule,
+        ready to pass to ``jit_train_step(..., overlap=..., reducer=...)``.
+        Resolution order for every knob is explicit argument >
+        ``config.overlap`` > plan: the bucket payload defaults to the
+        planned :attr:`repro.plan.PlanEntry.bucket_bytes` of the full
+        grad payload's octave, and the schedule itself comes from
+        :meth:`lower` at the bucket octave — so both the bucket size and
+        the per-bucket algorithm/permutation are planned dimensions, and
+        the schedule is certified before any fusion.
+
+        ``mesh`` must carry a 1-D data-parallel ``axis`` whose size
+        matches the plan's all-reduce group.
+        """
+        self._require_open("build an overlap reducer")
+        from repro.train.overlap_grads import OVERLAP_MODES
+
+        cfg = self.config.overlap
+        mode = cfg.mode if mode is None else mode
+        if mode == "off":
+            raise SessionError(
+                "overlap_step() with mode 'off'; set "
+                "SessionConfig.overlap.mode or pass mode= one of "
+                f"{OVERLAP_MODES}")
+        if mode not in OVERLAP_MODES:
+            raise SessionError(
+                f"unknown overlap mode {mode!r}; expected one of "
+                f"{OVERLAP_MODES}")
+        axis = cfg.axis if axis is None else axis
+        total = self.config.payload_bytes if total_bytes is None \
+            else float(total_bytes)
+        bb = cfg.bucket_bytes if bucket_bytes is None else float(bucket_bytes)
+        if self._plan is None:
+            self.plan()
+        if self._plan.lookup("all-reduce", total) is None:
+            raise SessionError(
+                "plan has no all-reduce entry; overlap_step() plans the "
+                "gradient all-reduce — include one in the job mix")
+        # reducer_from_plan lowers and certifies the exact schedule
+        # artifact before any fusion; the reducer never edits rounds
+        from repro.train.overlap_grads import reducer_from_plan
+
+        return reducer_from_plan(
+            self._plan, mesh, axis, total, mode=mode,
+            bucket_bytes=bb if bb > 0 else None,
+            use_pallas_add=cfg.use_pallas_add, interpret=interpret)
+
     # -- drift: observe / monitor -----------------------------------------
     def observe(self, cost_matrix_now: np.ndarray) -> DriftReport:
         """Feed a refreshed full-fabric cost matrix into drift tracking.

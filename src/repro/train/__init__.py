@@ -1,3 +1,12 @@
+from .overlap_grads import (  # noqa: F401
+    GradBucket,
+    OverlapGradReducer,
+    certified_allreduce,
+    jit_overlap_train_step,
+    make_overlap_train_step,
+    partition_tree,
+    reducer_from_plan,
+)
 from .train_step import (  # noqa: F401
     TrainState,
     batch_pspecs,

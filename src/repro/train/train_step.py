@@ -75,8 +75,39 @@ def batch_pspecs(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
 
 def jit_train_step(model, opt_cfg, cfg: ModelConfig, mesh: Mesh,
                    state_shapes: TrainState, batch_shapes: Dict[str, Any],
-                   donate: bool = True):
-    """jit with explicit shardings (ready to .lower() for the dry-run)."""
+                   donate: bool = True, overlap: str = "off",
+                   reducer: Any = None, axis: str = "data"):
+    """jit with explicit shardings (ready to .lower() for the dry-run).
+
+    ``overlap`` selects the gradient all-reduce path:
+
+    * ``"off"`` (default) — the baseline below, preserved bit-for-bit:
+      grads reduce through the compiler-inserted psum of the sharded
+      ``value_and_grad``;
+    * ``"bucketed"`` / ``"fused"`` — the certified bucketed overlap
+      path (:mod:`repro.train.overlap_grads`): pass a ``reducer``
+      (see :func:`~repro.train.overlap_grads.reducer_from_plan` or
+      ``Session.overlap_step``) whose mode decides the interleave
+      granularity; ``axis`` names the 1-D data-parallel mesh axis.
+    """
+    if overlap != "off":
+        from .overlap_grads import OVERLAP_MODES, jit_overlap_train_step
+        if overlap not in OVERLAP_MODES:
+            raise ValueError(
+                f"overlap must be 'off' or one of {OVERLAP_MODES}, "
+                f"got {overlap!r}")
+        if reducer is None:
+            raise ValueError(
+                "overlap != 'off' needs a reducer (Session.overlap_step "
+                "or overlap_grads.reducer_from_plan)")
+        if reducer.mode != overlap:
+            reducer = type(reducer)(
+                reducer.mesh, reducer.axis, reducer.schedule,
+                bucket_bytes=reducer.bucket_bytes, mode=overlap,
+                use_pallas_add=reducer.use_pallas_add,
+                interpret=reducer.interpret)
+        return jit_overlap_train_step(model, opt_cfg, mesh, axis, reducer,
+                                      donate=donate)
     step_fn = make_train_step(model, opt_cfg)
     s_specs = state_pspecs(state_shapes, cfg, mesh)
     b_specs = batch_pspecs(batch_shapes, mesh)

@@ -158,6 +158,9 @@ class TrainerConfig:
     log_every: int = 10
     rerank_threshold: float = 1.2
     max_restarts: int = 3
+    #: grad-bucket payload for obs accounting (0 = one unbucketed
+    #: all-reduce per step); use the planned PlanEntry.bucket_bytes
+    bucket_bytes: float = 0.0
 
 
 class Trainer:
@@ -182,6 +185,8 @@ class Trainer:
         self.history: List[Dict[str, float]] = []
         self.restarts = 0
         self._cached_param_bytes: Optional[float] = None
+        #: per-bucket all-reduce payloads, computed once per (re)mesh
+        self._cached_bucket_bytes: Optional[List[float]] = None
         self.rerank_events: List[int] = []
         if cluster is not None:
             if cluster.session is not None:
@@ -241,8 +246,11 @@ class Trainer:
             step += 1
             obs.metrics().counter("train.steps").inc()
             # the data-parallel gradient all-reduce is the step's one
-            # fleet-wide collective; its payload is the parameter bytes
-            obs.recorder().record("all-reduce", self._param_bytes())
+            # fleet-wide collective; record it at bucket granularity so
+            # the captured workload prices what the overlap path issues
+            rec = obs.recorder()
+            for payload in self._bucket_bytes():
+                rec.record("all-reduce", payload)
             self._observe_step(step, dt, metrics)
             if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
                 self.ckpt.save(step, self.state)
@@ -257,6 +265,27 @@ class Trainer:
                 for x in jax.tree_util.tree_leaves(params)
                 if hasattr(x, "size") and hasattr(x, "dtype")))
         return self._cached_param_bytes
+
+    def _bucket_bytes(self) -> List[float]:
+        """Per-bucket all-reduce payloads (one entry when unbucketed).
+
+        Cached alongside ``_param_bytes`` and likewise invalidated on
+        elastic restart — bucket boundaries only move when the params
+        (or ``cfg.bucket_bytes``) do.
+        """
+        if self._cached_bucket_bytes is None:
+            if self.cfg.bucket_bytes > 0:
+                from .overlap_grads import partition_tree
+
+                params = getattr(self.state, "params", None)
+                buckets = partition_tree(params, self.cfg.bucket_bytes)
+                self._cached_bucket_bytes = [float(b.n_bytes)
+                                             for b in buckets]
+                obs.metrics().gauge("train.overlap.buckets").set(
+                    len(buckets))
+            else:
+                self._cached_bucket_bytes = [self._param_bytes()]
+        return self._cached_bucket_bytes
 
     def _observe_step(self, step: int, dt: float, metrics: Dict) -> None:
         if step % self.cfg.log_every == 0 or step <= 2:
@@ -300,4 +329,9 @@ class Trainer:
             template = jax.tree.map(np.asarray, self.state)
             restored, _, _ = restore(self.cfg.ckpt_dir, template, step)
             self.state = jax.tree.map(jax.numpy.asarray, restored)
+        # the rebuilt step may carry differently-shaped params (elastic
+        # remesh): recompute payloads on next use instead of reporting
+        # the dead mesh's numbers
+        self._cached_param_bytes = None
+        self._cached_bucket_bytes = None
         self._init_adaptation()
